@@ -1,0 +1,65 @@
+"""Paper ablations beyond the headline figures.
+
+* Eq. (5): chip-first vs chip-last packaging flows — the paper states
+  chip-last is the priority selection; quantify the gap per node/area.
+* Sec. 4.1 ("as the yield of 7nm improves, the advantage is smaller"):
+  defect-density sensitivity of the multi-chip advantage.
+* Negative-binomial cluster parameter c: model-risk band for the
+  headline Fig. 4 numbers.
+"""
+from repro.core import re_cost, soc_system, split_system
+from repro.core.technology import PROCESS_NODES
+from .common import emit
+
+import dataclasses
+
+
+def run():
+    rows = []
+    for node in ("7nm", "5nm"):
+        for area in (400.0, 800.0):
+            s = split_system("s", area, node, 3, "2.5D")
+            last = re_cost(s, "chip-last").total
+            first = re_cost(s, "chip-first").total
+            rows.append({"node": node, "area_mm2": area,
+                         "chip_last": last, "chip_first": first,
+                         "chip_first_penalty": first / last - 1})
+    emit("ablation_eq5_chip_first_vs_last", rows)
+    assert all(r["chip_first_penalty"] > 0 for r in rows)
+
+    rows = []
+    base = PROCESS_NODES["7nm"]
+    for d0 in (0.05, 0.07, 0.09, 0.11, 0.13):
+        nd = dataclasses.replace(base, defect_density=d0)
+        import repro.core.technology as T
+        old = T.PROCESS_NODES["7nm"]
+        T.PROCESS_NODES["7nm"] = nd
+        try:
+            soc = re_cost(soc_system("s", 800.0, "7nm")).total
+            mcm = re_cost(split_system("m", 800.0, "7nm", 3, "MCM")).total
+        finally:
+            T.PROCESS_NODES["7nm"] = old
+        rows.append({"defect_density": d0, "soc": soc, "mcm3": mcm,
+                     "mcm_saving": 1 - mcm / soc})
+    emit("ablation_defect_density_sensitivity", rows)
+    # paper Sec 4.1: maturing yield shrinks the multi-chip advantage
+    assert rows[0]["mcm_saving"] < rows[-1]["mcm_saving"]
+
+    rows = []
+    for c in (1.0, 3.0, 6.0, 1e6):    # 1e6 ~ Poisson limit
+        nd = dataclasses.replace(PROCESS_NODES["5nm"], cluster_param=c)
+        import repro.core.technology as T
+        old = T.PROCESS_NODES["5nm"]
+        T.PROCESS_NODES["5nm"] = nd
+        try:
+            soc = re_cost(soc_system("s", 800.0, "5nm"))
+        finally:
+            T.PROCESS_NODES["5nm"] = old
+        rows.append({"cluster_c": c,
+                     "defect_share": soc.chip_defects / soc.total})
+    emit("ablation_cluster_param_sensitivity", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

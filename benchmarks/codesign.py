@@ -1,0 +1,44 @@
+"""Beyond-paper bridge: price TPU-class accelerator packagings with the
+faithful Chiplet Actuary model and combine with the dry-run rooflines
+into $/step — the paper's early-stage decision method applied to the
+hardware this framework targets."""
+import json
+from pathlib import Path
+
+from repro.core import AcceleratorSpec, cost_per_step, price_accelerators
+from .common import emit
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun.json"
+
+
+def run():
+    spec = AcceleratorSpec(name="tpu_v5e_class", compute_area=300.0,
+                           uncore_area=60.0, phy_area=80.0, process="5nm",
+                           phy_process="14nm")
+    prices = price_accelerators(spec, quantity=1e6)
+    rows = [{"packaging": k, **{kk: vv for kk, vv in v.items()}}
+            for k, v in prices.items()]
+    emit("codesign_accelerator_pricing", rows)
+
+    if RESULTS.exists():
+        results = json.loads(RESULTS.read_text())
+        cheapest = min(prices.items(), key=lambda kv: kv[1]["unit_cost"])
+        rows2 = []
+        for key in ("glm4_9b|train_4k|16x16",
+                    "mistral_large_123b|train_4k|16x16",
+                    "deepseek_v2_236b|prefill_32k|16x16"):
+            v = results.get(key)
+            if not v or v["status"] != "ok":
+                continue
+            r = v["roofline"]
+            cell = {"t_compute": r["t_compute"], "t_memory": r["t_memory"],
+                    "t_collective": r["t_collective"],
+                    "hlo_flops": r["flops_per_device"] * r["chips"]}
+            cps = cost_per_step(cell, cheapest[1]["unit_cost"], r["chips"])
+            rows2.append({"cell": key, "packaging": cheapest[0], **cps})
+        emit("codesign_cost_per_step", rows2)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

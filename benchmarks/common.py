@@ -1,0 +1,33 @@
+"""Shared helpers for the benchmark suite (CSV emission + timing)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable
+
+
+def emit(section: str, rows: Iterable[dict]):
+    rows = list(rows)
+    if not rows:
+        print(f"# {section}: (no rows)")
+        return
+    cols = list(rows[0].keys())
+    print(f"# {section}")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(_fmt(r[c]) for c in cols))
+    print()
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def timed(fn: Callable, *args, repeat: int = 3):
+    fn(*args)                      # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt * 1e6           # us per call

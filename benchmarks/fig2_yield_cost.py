@@ -1,0 +1,27 @@
+"""Paper Fig. 2: yield-area and cost-area relations per process node."""
+import jax.numpy as jnp
+
+from repro.core import cost_area_curve
+from .common import emit
+
+
+def run():
+    areas = jnp.asarray([25, 50, 100, 200, 400, 600, 800], jnp.float32)
+    rows = []
+    for node in ("28nm", "14nm", "10nm", "7nm", "5nm"):
+        c = cost_area_curve(node, areas)
+        for i, a in enumerate(areas):
+            rows.append({
+                "node": node, "area_mm2": float(a),
+                "yield": float(c["yield"][i]),
+                "norm_cost_per_area": float(c["norm_cost_per_area"][i]),
+            })
+    emit("fig2_yield_cost_vs_area", rows)
+    # headline check: 5nm 800mm2 die yields poorly and costs >2x per mm2
+    c5 = cost_area_curve("5nm", jnp.asarray([800.0]))
+    assert float(c5["yield"][0]) < 0.5
+    return rows
+
+
+if __name__ == "__main__":
+    run()

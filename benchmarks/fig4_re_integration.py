@@ -1,0 +1,34 @@
+"""Paper Fig. 4: normalized RE cost across integrations x nodes x
+chiplet counts (all normalized to the 100 mm^2 SoC of each node)."""
+from repro.core import re_cost, soc_system, split_system
+from .common import emit
+
+
+def run():
+    rows = []
+    for node in ("14nm", "7nm", "5nm"):
+        base = re_cost(soc_system("base", 100.0, node)).total
+        for area in (300.0, 500.0, 800.0, 900.0):
+            soc = re_cost(soc_system("s", area, node))
+            rows.append({
+                "node": node, "area_mm2": area, "integration": "SoC",
+                "n_chiplets": 1, "total_norm": soc.total / base,
+                "die_defects_norm": soc.chip_defects / base,
+                "packaging_norm": soc.packaging_cost / base,
+            })
+            for integ in ("MCM", "InFO", "2.5D"):
+                for n in (2, 3, 5):
+                    br = re_cost(split_system("m", area, node, n, integ))
+                    rows.append({
+                        "node": node, "area_mm2": area,
+                        "integration": integ, "n_chiplets": n,
+                        "total_norm": br.total / base,
+                        "die_defects_norm": br.chip_defects / base,
+                        "packaging_norm": br.packaging_cost / base,
+                    })
+    emit("fig4_re_cost_normalized", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

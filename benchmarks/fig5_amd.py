@@ -1,0 +1,35 @@
+"""Paper Fig. 5: AMD chiplet-architecture RE validation (early defect
+densities 0.13/7nm, 0.12/12nm as the paper uses)."""
+from repro.core import Module, System, make_chip, re_cost, soc_system
+from .common import emit
+
+
+def run():
+    rows = []
+    ccd = make_chip("amd_ccd", [Module("amd_ccd_mod", 74.0, "7nm")], "7nm",
+                    integration="MCM", early_defects=True)
+    for cores, n_ccd, iod_area in ((8, 1, 125.0), (16, 2, 125.0),
+                                   (32, 4, 416.0)):
+        iod = make_chip(f"amd_iod_{iod_area}",
+                        [Module(f"amd_iod_mod_{iod_area}", iod_area,
+                                "12nm")], "12nm", integration="MCM",
+                        early_defects=True)
+        mcm = re_cost(System(f"amd{cores}_mcm",
+                             tuple([ccd] * n_ccd + [iod]), "MCM"))
+        soc = re_cost(soc_system(f"amd{cores}_soc",
+                                 74.0 * n_ccd + iod_area, "7nm",
+                                 early_defects=True))
+        rows.append({
+            "cores": cores,
+            "soc_die_cost": soc.die_cost, "mcm_die_cost": mcm.die_cost,
+            "die_saving": 1 - mcm.die_cost / soc.die_cost,
+            "mcm_total": mcm.total, "soc_total": soc.total,
+            "total_saving": 1 - mcm.total / soc.total,
+            "mcm_packaging_share": mcm.packaging_cost / mcm.total,
+        })
+    emit("fig5_amd_validation", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Paper Fig. 6: total (RE + amortized NRE) cost structure of a single
+800 mm^2 5nm system vs production quantity."""
+from repro.core import amortized_costs, soc_system, split_system
+from .common import emit
+
+
+def run():
+    rows = []
+    for qty in (2e5, 5e5, 1e6, 2e6, 5e6, 1e7):
+        soc = amortized_costs(
+            [soc_system("soc", 800.0, "5nm", quantity=qty)])["soc"]
+        base = soc.re.total
+        for label, sys_ in (
+                ("SoC", soc_system("s", 800.0, "5nm", quantity=qty)),
+                ("MCM-2", split_system("s", 800.0, "5nm", 2, "MCM",
+                                       quantity=qty)),
+                ("InFO-2", split_system("s", 800.0, "5nm", 2, "InFO",
+                                        quantity=qty)),
+                ("2.5D-2", split_system("s", 800.0, "5nm", 2, "2.5D",
+                                        quantity=qty))):
+            c = amortized_costs([sys_])["s"]
+            rows.append({
+                "quantity": qty, "system": label,
+                "re_norm": c.re.total / base,
+                "nre_modules_norm": c.nre_modules / base,
+                "nre_chips_norm": c.nre_chips / base,
+                "nre_pkg_norm": c.nre_packages / base,
+                "nre_d2d_norm": c.nre_d2d / base,
+                "total_norm": c.total / base,
+            })
+    emit("fig6_single_system_total_cost", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Paper Fig. 8: SCMS (single chiplet, multiple systems) reuse scheme."""
+from repro.core import (amortized_costs, re_cost, scms_soc_equivalents,
+                        scms_systems)
+from .common import emit
+
+
+def run():
+    rows = []
+    base = re_cost(scms_systems(integration="MCM")[-1]).total  # 4x MCM RE
+    for integ in ("MCM", "2.5D"):
+        for reuse in (False, True):
+            systems = scms_systems(integration=integ, package_reuse=reuse)
+            costs = amortized_costs(systems)
+            for s in systems:
+                c = costs[s.name]
+                rows.append({
+                    "integration": integ, "package_reuse": reuse,
+                    "system": s.name,
+                    "re_norm": c.re.total / base,
+                    "packaging_share": c.re.packaging_cost / c.re.total,
+                    "nre_chips_norm": c.nre_chips / base,
+                    "nre_pkg_norm": c.nre_packages / base,
+                    "total_norm": c.total / base,
+                })
+    socs = scms_soc_equivalents()
+    costs = amortized_costs(socs)
+    for s in socs:
+        c = costs[s.name]
+        rows.append({
+            "integration": "SoC", "package_reuse": False, "system": s.name,
+            "re_norm": c.re.total / base,
+            "packaging_share": c.re.packaging_cost / c.re.total,
+            "nre_chips_norm": c.nre_chips / base,
+            "nre_pkg_norm": c.nre_packages / base,
+            "total_norm": c.total / base,
+        })
+    emit("fig8_scms_reuse", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

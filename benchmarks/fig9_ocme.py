@@ -1,0 +1,32 @@
+"""Paper Fig. 9: OCME (one center, multiple extensions) + heterogeneity."""
+from repro.core import (amortized_costs, ocme_soc_equivalents, ocme_systems,
+                        re_cost)
+from .common import emit
+
+
+def run():
+    rows = []
+    base = re_cost(ocme_systems()[-1]).total     # largest MCM RE
+    variants = [
+        ("SoC", ocme_soc_equivalents()),
+        ("MCM", ocme_systems()),
+        ("MCM+pkg-reuse", ocme_systems(package_reuse=True)),
+        ("MCM+pkg+hetero14nm", ocme_systems(center_process="14nm",
+                                            package_reuse=True)),
+    ]
+    for label, systems in variants:
+        costs = amortized_costs(systems)
+        for s in systems:
+            c = costs[s.name]
+            rows.append({
+                "variant": label, "system": s.name,
+                "re_norm": c.re.total / base,
+                "nre_norm": c.nre_total / base,
+                "total_norm": c.total / base,
+            })
+    emit("fig9_ocme_reuse", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

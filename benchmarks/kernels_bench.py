@@ -1,0 +1,45 @@
+"""Kernel micro-bench: XLA-path wall time on CPU (the Pallas path is
+interpret-only here — its perf target is the TPU; correctness is
+covered by tests).  Reported to track CPU-side regressions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from .common import emit, timed
+
+RNG = np.random.default_rng(0)
+
+
+def rnd(*s):
+    return jnp.asarray(RNG.standard_normal(s), jnp.float32)
+
+
+def run():
+    rows = []
+    q, k, v = rnd(1, 512, 8, 64), rnd(1, 512, 2, 64), rnd(1, 512, 2, 64)
+    f = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, impl="xla"))
+    _, us = timed(lambda: f(q, k, v).block_until_ready())
+    rows.append({"name": "attention_xla_512x8x64", "us_per_call": us})
+
+    xh, dt = rnd(1, 256, 4, 32), jnp.abs(rnd(1, 256, 4)) * 0.1
+    al, bm, cm = rnd(4), rnd(1, 256, 16), rnd(1, 256, 16)
+    g = jax.jit(lambda *a: ops.mamba_scan(*a, impl="xla")[0])
+    _, us = timed(lambda: g(xh, dt, al, bm, cm).block_until_ready())
+    rows.append({"name": "ssd_xla_256x4x32", "us_per_call": us})
+
+    x, w = rnd(8, 128, 64), rnd(8, 64, 128)
+    h = jax.jit(lambda x, w: ops.moe_gmm(x, w, impl="xla"))
+    _, us = timed(lambda: h(x, w).block_until_ready())
+    rows.append({"name": "gmm_xla_8x128x64x128", "us_per_call": us})
+
+    xr, sc = rnd(1024, 512), rnd(512)
+    r = jax.jit(lambda x, s: ops.fused_rmsnorm(x, s, impl="xla"))
+    _, us = timed(lambda: r(xr, sc).block_until_ready())
+    rows.append({"name": "rmsnorm_xla_1024x512", "us_per_call": us})
+    emit("kernel_microbench_cpu", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,89 @@
+"""§Roofline table: three roofline terms per (arch x shape) from the
+multi-pod dry-run's compiled artifacts (results/dryrun.json).
+
+  compute    = HLO_FLOPs / (chips x 197 TFLOP/s)
+  memory     = HBM_bytes / (chips x 819 GB/s)
+  collective = collective_bytes / (chips x 4 x 50 GB/s links)
+
+plus MODEL_FLOPS (6·N·D / 2·N_active·D), the useful-compute ratio and
+the MFU-style roofline fraction at the bound step time.
+"""
+import json
+from pathlib import Path
+
+from .common import emit
+
+RESULTS_DIR = Path(__file__).resolve().parents[1] / "results"
+RESULTS = RESULTS_DIR / "dryrun_optimized.json"
+FALLBACK = RESULTS_DIR / "dryrun.json"
+BASELINE = RESULTS_DIR / "dryrun_baseline.json"
+
+
+def rows_from(results: dict, mesh: str = "16x16", tag: str = ""):
+    rows = []
+    for key, v in sorted(results.items()):
+        parts = key.split("|")
+        if len(parts) == 4 and parts[3] != tag:
+            continue
+        if len(parts) == 3 and tag:
+            continue
+        if parts[2] != mesh:
+            continue
+        if v["status"] == "skip":
+            rows.append({"arch": parts[0], "shape": parts[1],
+                         "bound": "SKIP", "t_compute_s": 0.0,
+                         "t_memory_s": 0.0, "t_collective_s": 0.0,
+                         "t_bound_s": 0.0, "model_flops": 0,
+                         "useful_ratio": 0.0, "roofline_frac": 0.0,
+                         "mem_gb_per_dev": 0.0})
+            continue
+        if v["status"] != "ok":
+            continue
+        r = v["roofline"]
+        rows.append({
+            "arch": parts[0], "shape": parts[1], "bound": r["bound"],
+            "t_compute_s": r["t_compute"], "t_memory_s": r["t_memory"],
+            "t_collective_s": r["t_collective"], "t_bound_s": r["t_bound"],
+            "model_flops": r["model_flops"],
+            "useful_ratio": r["useful_flops_ratio"],
+            "roofline_frac": r["roofline_fraction"],
+            "mem_gb_per_dev": v["memory"]["peak_estimate_gb"],
+        })
+    return rows
+
+
+def run():
+    path = RESULTS if RESULTS.exists() else FALLBACK
+    if not path.exists():
+        print("# roofline: results/dryrun*.json missing — run "
+              "`python -m repro.launch.dryrun --all --mesh both` first")
+        return []
+    results = json.loads(path.read_text())
+    rows = rows_from(results, "16x16")
+    emit("roofline_single_pod_16x16", rows)
+    rows_mp = rows_from(results, "2x16x16")
+    emit("roofline_two_pod_2x16x16", rows_mp)
+
+    if BASELINE.exists() and path != BASELINE:
+        base = json.loads(BASELINE.read_text())
+        comp = []
+        base_rows = {(r["arch"], r["shape"]): r
+                     for r in rows_from(base, "16x16")}
+        for r in rows:
+            b = base_rows.get((r["arch"], r["shape"]))
+            if not b or r["bound"] == "SKIP" or b["t_bound_s"] <= 0:
+                continue
+            comp.append({
+                "arch": r["arch"], "shape": r["shape"],
+                "baseline_t_s": b["t_bound_s"],
+                "optimized_t_s": r["t_bound_s"],
+                "speedup": b["t_bound_s"] / max(r["t_bound_s"], 1e-12),
+                "baseline_frac": b["roofline_frac"],
+                "optimized_frac": r["roofline_frac"],
+            })
+        emit("roofline_baseline_vs_optimized", comp)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Benchmark orchestrator: one section per paper table/figure plus the
+roofline, codesign and kernel benches.
+
+  PYTHONPATH=src python -m benchmarks.run
+"""
+import sys
+import time
+
+
+def main() -> None:
+    from . import (ablations, codesign, fig2_yield_cost,
+                   fig4_re_integration, fig5_amd, fig6_single_system,
+                   fig8_scms, fig9_ocme, fig10_fsmc, kernels_bench,
+                   roofline)
+
+    benches = [
+        ("fig2", fig2_yield_cost), ("fig4", fig4_re_integration),
+        ("fig5", fig5_amd), ("fig6", fig6_single_system),
+        ("fig8", fig8_scms), ("fig9", fig9_ocme), ("fig10", fig10_fsmc),
+        ("ablations", ablations),
+        ("roofline", roofline), ("codesign", codesign),
+        ("kernels", kernels_bench),
+    ]
+    failures = 0
+    for name, mod in benches:
+        t0 = time.perf_counter()
+        try:
+            mod.run()
+            print(f"# [{name}] done in {time.perf_counter()-t0:.2f}s\n")
+        except Exception as e:  # keep the suite going, report at the end
+            failures += 1
+            print(f"# [{name}] FAILED: {type(e).__name__}: {e}\n")
+    if failures:
+        print(f"# {failures} benchmark(s) failed")
+        sys.exit(1)
+    print("# all benchmarks ok")
+
+
+if __name__ == "__main__":
+    main()

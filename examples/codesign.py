@@ -1,0 +1,53 @@
+"""Hardware/workload co-design: price TPU-class accelerator packagings
+with the faithful Chiplet Actuary model and fold the dry-run rooflines
+into $/step per assigned architecture — the paper's decision method
+applied to this framework's own hardware.
+
+  PYTHONPATH=src python examples/codesign.py
+"""
+import json
+from pathlib import Path
+
+from repro.core import AcceleratorSpec, cost_per_step, price_accelerators
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / \
+    "dryrun_optimized.json"
+FALLBACK = Path(__file__).resolve().parents[1] / "results" / "dryrun.json"
+
+
+def main():
+    spec = AcceleratorSpec(name="tpu_v5e_class", compute_area=300.0,
+                           uncore_area=60.0, phy_area=80.0,
+                           process="5nm", phy_process="14nm")
+    print("accelerator packaging candidates (1M units):")
+    prices = price_accelerators(spec)
+    for label, p in prices.items():
+        print(f"  {label:12s} unit ${p['unit_cost']:7.0f}  "
+              f"die ${p['die_cost']:7.0f}  pkg ${p['packaging_cost']:6.0f}"
+              f"  ${p['usd_per_pflops']:.0f}/PFLOPs")
+    best = min(prices.items(), key=lambda kv: kv[1]["unit_cost"])
+    print(f"cheapest: {best[0]} — the paper's OCME/heterogeneity insight "
+          f"priced for this accelerator class\n")
+
+    path = RESULTS if RESULTS.exists() else FALLBACK
+    if not path.exists():
+        print("run the dry-run first for $/step numbers")
+        return
+    results = json.loads(path.read_text())
+    print(f"cost per training/serving step ({best[0]} packaging):")
+    for key, v in sorted(results.items()):
+        if v.get("status") != "ok" or v.get("mesh") != "16x16":
+            continue
+        if len(key.split("|")) != 3:
+            continue
+        r = v["roofline"]
+        cell = {"t_compute": r["t_compute"], "t_memory": r["t_memory"],
+                "t_collective": r["t_collective"],
+                "hlo_flops": r["flops_per_device"] * r["chips"]}
+        cps = cost_per_step(cell, best[1]["unit_cost"], r["chips"])
+        print(f"  {key:45s} ${cps['usd_per_step']:8.4f}/step  "
+              f"bound {r['bound']}")
+
+
+if __name__ == "__main__":
+    main()

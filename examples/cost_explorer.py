@@ -1,0 +1,44 @@
+"""Architecture exploration: sweep the (area x n_chiplets x tech x node)
+design space with the vmapped explorer, print the Pareto frontier, and
+run the (beyond-paper) differentiable partitioner.
+
+  PYTHONPATH=src python examples/cost_explorer.py
+"""
+import jax.numpy as jnp
+
+from repro.core import pareto_front, sweep_partitions
+from repro.core.gradient import optimize_chiplet_count
+
+
+def main():
+    points = []
+    for node in ("14nm", "7nm", "5nm"):
+        for integ in ("MCM", "InFO", "2.5D"):
+            res = sweep_partitions(node, integ,
+                                   areas_mm2=[200, 400, 600, 800],
+                                   n_chiplets=[1, 2, 3, 4, 5, 6])
+            totals = res["total"]
+            for i, a in enumerate(res["areas"]):
+                for j, n in enumerate(res["n_chiplets"]):
+                    points.append({
+                        "node": node, "integ": integ, "area": float(a),
+                        "n": int(n), "cost": float(totals[i, j]),
+                    })
+    # Pareto: cheapest way to buy silicon area
+    front = pareto_front(
+        [{"x": -p["area"], "y": p["cost"], **p} for p in points], "x", "y")
+    print("cost-area Pareto frontier (max area, min cost):")
+    for p in front:
+        print(f"  {p['area']:5.0f}mm2  ${p['cost']:8.0f}  "
+              f"{p['node']} {p['integ']} n={p['n']}")
+
+    print("\ndifferentiable partitioner (relaxed chiplet count):")
+    for node in ("7nm", "5nm"):
+        r = optimize_chiplet_count(node, "MCM", 800.0)
+        print(f"  {node} 800mm2 MCM: n*={r.n_relaxed:.2f} -> "
+              f"round {r.n_rounded}, cost ${r.cost_rounded:.0f} "
+              f"(SoC ${r.cost_soc:.0f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Quickstart: the Chiplet Actuary cost model in five minutes.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import (amortized_costs, best_partition, re_cost,
+                        soc_system, split_system)
+
+
+def main():
+    # 1. Price a monolithic 800 mm^2 5nm SoC.
+    soc = soc_system("my_soc", 800.0, "5nm", quantity=1e6)
+    br = re_cost(soc)
+    print(f"monolithic 800mm2 5nm RE: ${br.total:,.0f}"
+          f"  (defects: ${br.chip_defects:,.0f} = "
+          f"{br.chip_defects/br.total:.0%})")
+
+    # 2. Split it into chiplets — how many is optimal?
+    for integ in ("MCM", "InFO", "2.5D"):
+        b = best_partition("5nm", integ, 800.0)
+        print(f"{integ:5s}: best n={b['best_n']}  "
+              f"${b['best_cost']:,.0f}  saving {b['saving']:.1%}")
+
+    # 3. Total cost including NRE amortization at 1M units.
+    mcm = split_system("my_mcm", 800.0, "5nm", 3, "MCM", quantity=1e6)
+    costs = amortized_costs([soc, mcm])
+    for name, c in costs.items():
+        print(f"{name}: RE ${c.re.total:,.0f} + NRE/unit "
+              f"${c.nre_total:,.0f} = ${c.total:,.0f}")
+
+
+if __name__ == "__main__":
+    main()

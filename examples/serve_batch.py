@@ -1,0 +1,16 @@
+"""Continuous-batching serving example: submit a burst of requests to
+the slot-based engine and print per-request outputs + latency stats.
+
+  PYTHONPATH=src python examples/serve_batch.py
+"""
+import sys
+
+from repro.launch.serve import main as serve_main
+
+
+if __name__ == "__main__":
+    sys.exit(serve_main([
+        "--arch", "deepseek_7b", "--smoke",
+        "--requests", "12", "--slots", "4",
+        "--cache-len", "96", "--prompt-len", "12", "--max-new", "16",
+    ]))

@@ -1,0 +1,279 @@
+"""Generate EXPERIMENTS.md from results/*.json + the calibration run.
+
+Run: PYTHONPATH=src python scripts/make_experiments.py
+"""
+import io
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+OPT = ROOT / "results" / "dryrun_optimized.json"
+BASE = ROOT / "results" / "dryrun_baseline.json"
+
+PERF_LOG = """
+## §Perf — hillclimbing log (hypothesis → change → measure → verdict)
+
+Three cells were selected per the brief: **worst roofline fraction**
+(`xlstm_125m/train_4k`, 0.0066), **most collective-bound**
+(`mistral_large_123b/train_4k`, t_coll 76.6 s ≈ t_bound), and **most
+representative of the paper's cost/scale axis**
+(`deepseek_v2_236b/train_4k` — the 236B MoE: the largest silicon
+footprint, i.e. the system the Chiplet Actuary co-design layer prices).
+All terms are per-device seconds on the 16x16 pod (brief's v5e-class
+constants).  The baseline table is `results/dryrun_baseline.json`
+(paper-faithful framework, first-compile configuration); the optimized
+table is `results/dryrun_optimized.json`.
+
+### Iteration 0 — infrastructure fixes discovered by the first baselines
+* **Hypothesis:** per-device memory should be dominated by weights+opt
+  state. **Measured:** 438 GB/dev (mistral train).  Three real bugs:
+  (1) remat carries batch-sharded only -> added Megatron-SP sequence
+  sharding of the residual (seq@model); (2) gradient-accumulation
+  microbatches multiplied the batch instead of splitting it; (3) GQA's
+  (H -> Hkv x G) head reshape defeated GSPMD propagation (96@16 can't
+  split (8,12)) -> repeat KV to full heads on the XLA path.
+  438 -> 35.8 GB/dev, t_bound 99.7 -> 87.7 s. **Confirmed.**
+* decode cells: KV caches were unsharded on sequence -> `kv_seq@model`
+  rule (flash-decode layout): deepseek-7b decode 153.9 -> 28.8 GB/dev.
+
+### Iteration 1 — mixed-precision einsum operands (bf16 in, f32 out)
+* **Hypothesis:** f32-cast operands double attention traffic; keeping
+  bf16 operands with `preferred_element_type=f32` halves it (napkin:
+  attention operand bytes / 2).
+* **Measured:** t unchanged (87.68 -> 87.68 s). **Refuted as measured**:
+  the CPU dry-run backend upcasts bf16 dots to f32 regardless, so the
+  change is invisible in CPU-compiled HLO (it remains correct for TPU,
+  where the MXU consumes bf16 natively).  Led directly to the
+  cast-artifact analysis below.
+* **Lesson:** the dry-run backend materializes f32 shadow copies of
+  bf16 weights/caches that a TPU would never allocate.  The analyzer
+  now (a) skips pure dtype-cast fusions, (b) chases fusion operand uses
+  through casts.  mistral decode 0.907 -> 0.219 s (4.1x) once the
+  in-place cache scatter (`.at[b, kv_len].set`, was `jnp.where` over
+  the full cache) landed with it.
+
+### Iteration 2 — mistral_large_123b/train_4k (collective-bound)
+* Collective composition: all-reduce 9.2 TB/dev (in-loop full-size grad
+  partials over the seq-sharded axis), all-gather 6.3 TB/dev (FSDP
+  weight gathers x3 passes x4 microbatches).
+* **Grid:** `remat=dots` (skip the recompute pass) / `accum=2` /
+  both / `act_shard=batch2d`.
+  - remat=dots: t 77.3 -> 77.3 s, mem 37 -> 68 GB. **Refuted** (XLA
+    re-gathers weights for backward regardless; memory doubles).
+  - batch2d: t -> 685.6 s. **Refuted hard** — 2D-batch grad partials
+    all-reduce at full size over both axes.  Valuable negative result.
+  - accum=2: t 77.3 -> 57.6 s. accum=1: 54.8 s but 68 GB/dev.
+    **Confirmed**: grad-sync cost scales with microbatch count;
+    accum=2 balances memory (52 GB -> 26 GB on the 2-pod mesh).
+* With the flash-kernel VMEM credit (see Method note): t_bound 47.5 s,
+  **frac 0.174 -> 0.321** (1.85x).  Config updated: accum=2.
+
+### Iteration 3 — xlstm_125m/train_4k (worst fraction)
+* **Hypothesis:** the quadratic mLSTM D-matrix (B,H,4096,4096 f32) and
+  the 4096-step sLSTM scan dominate traffic (napkin: ~10 materialized
+  (B,H,S,S) buffers/layer ~ TBs).
+* **Changes:** (a) NEW chunked mLSTM (flash-linear-attention dataflow:
+  intra-chunk quadratic + carried (K,V) matrix memory; exact to 3e-6 vs
+  the parallel form; also unlocks long-context xLSTM training);
+  (b) NEW fused sLSTM Pallas kernel (states live in VMEM across the
+  whole sequence; only gate inputs/hidden stream) backing the
+  recurrent-state credit in the analyzer.
+* **Measured (final sweep):** train_4k t 1.331 -> 0.742 s (**1.79x**,
+  frac 0.0066 -> 0.0119); prefill_32k 1.153 -> 0.089 s (**12.9x**,
+  frac 0.0025 -> 0.033).  **Confirmed.**  (Fraction stays low because a 125M model at
+  d=768/H=4 cannot fill a 256-chip pod — heads/FFN are too small to
+  shard; the right fix at fleet level is a smaller slice, which the
+  cost model quantifies in $/step.)
+
+### Iteration 4 — deepseek_v2_236b/train_4k (paper-representative)
+* **Hypothesis:** MoE dispatch dominates: the sort-based dispatch
+  materializes ~10 (N·k, D)-sized buffers (mask multiplies, un-permute,
+  (N,k,D) combine) = ~14 TB/dev.
+* **Change:** dispatch rewrite — OOB-drop/fill scatter instead of
+  validity mask multiplies; weighted scatter-add straight into (N, D)
+  (skips the un-permute buffer and the k-sum).
+* **Measured:** train 84.3 -> 76.2 s (now collective-bound; baseline
+  142.2 s); prefill_32k 82.5 -> 20.7 s.  **Confirmed.**
+* accum=2 probe: 76.2 -> 74.2 s (-3%) for +70% memory. **Rejected.**
+* **Iteration 4b — dispatch memory.** The (N·k, D) gather/scatter
+  transients lowered REPLICATED on feature (266 GB/dev at 32k prefill
+  on the 2-pod mesh).  Probe 1: token-blockwise scan — memory fixed
+  (19.5 GB) but each block all-gathered the token table (t_coll 21 ->
+  124 s). **Refuted.**  Probe 2: keep the monolithic dispatch but pin
+  the token table + transients FEATURE-sharded (rows replicated,
+  D@model -> local row gathers): train 76.2 -> **70.9 s**
+  (frac 0.037), prefill 17.3 s (frac 0.050), memory 148 -> 35 GB/dev
+  single-pod. **Confirmed** — final: baseline 142.2 -> 70.9 s
+  (**2.0x**) train, 82.5 -> 17.3 s (**4.8x**) prefill.
+
+### Iteration 5 (bonus, beyond the required three) — zamba2_7b + long_500k
+* **Hypothesis:** SSD decay-tile traffic scales with S·L (nc x L² per
+  pass) -> halving ssm_chunk 128->64 halves the dominant memory term;
+  accum=2 halves activation residency.
+* **Measured:** train_4k 10.31 -> 6.92 s (**1.49x**, frac 0.0828 ->
+  0.123); prefill_32k 2.43 -> 1.55 s (frac 0.184).  **Confirmed**
+  (config updated; note: L=64 gives 25% MXU tile utilization on the
+  intra-chunk matmul — acceptable while the cell sits 10x from its
+  compute roof).
+* **long_500k (batch=1):** the data axis idles when batch can't shard
+  -> new rule `kv -> data` (per-tensor divisibility fallback keeps
+  every batch>1 cell unchanged, verified by re-runs): the 500k KV
+  cache shards 256-way (kv_seq@model x kv@data): zamba long_500k
+  23.0 -> **1.63 GB/dev**, t 0.149 -> 0.0114 s (**13x**).
+
+### Method note — the two VMEM credits (beyond-paper, documented)
+The dry-run lowers the XLA fallback path (Pallas-TPU cannot lower on
+CPU).  That path must materialize (a) flash attention/SSD score tiles
+and (b) recurrent cell states to HBM; the shipped Pallas kernels hold
+both in VMEM on the target.  The analyzer therefore reports BOTH
+`t_memory_xla_path` and the kernel-path `t_memory` (hbm_bytes minus
+score-tile and recurrent-state traffic).  §Roofline uses the kernel
+path; every credit is backed by a tested kernel
+(flash_attention/flash_decode/mamba_scan/slstm_cell, allclose vs
+oracles in tests/test_kernels.py).
+
+### Net effect (all 32 runnable single-pod cells, final framework)
+Geomean t_bound speedup **3.99x** vs the paper-faithful baseline
+snapshot; largest wins on prefill (10-13x: score tiles + MoE dispatch
++ cast artifacts) and decode (up to 24x: in-place cache scatter +
+kv_seq sharding); best absolute fractions: mistral prefill 0.63
+(compute-bound — at the roofline knee), dense train 0.26-0.32
+(collective-bound at FSDP's inherent gather/reduce cost for
+123B x 1M tokens on 256 chips).
+
+### Stopping criterion
+Last three accepted changes on the dominant terms gained 1.87x / 1.76x
+/ 1.85x; the follow-up probes (accum sweeps on dsv2, remat=dots,
+batch2d) all gained <5% or regressed — per the brief's rule
+(three consecutive <5% changes) the loop was stopped at the grid above
+for the three chosen cells; remaining cells report baselines (now
+measured under the final framework, see table).
+"""
+
+
+def fmt_rows(rows, cols, header=True):
+    out = []
+    if header:
+        out.append("| " + " | ".join(cols) + " |")
+        out.append("|" + "---|" * len(cols))
+    for r in rows:
+        out.append("| " + " | ".join(
+            f"{r[c]:.4g}" if isinstance(r[c], float) else str(r[c])
+            for c in cols) + " |")
+    return "\n".join(out)
+
+
+def main():
+    sys.path.insert(0, str(ROOT / "src"))
+    sys.path.insert(0, str(ROOT))
+    from benchmarks.roofline import rows_from
+
+    opt = json.loads(OPT.read_text()) if OPT.exists() else {}
+    base = json.loads(BASE.read_text()) if BASE.exists() else {}
+
+    cal = subprocess.run(
+        [sys.executable, str(ROOT / "scripts" / "calibrate.py")],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin"})
+    cal_txt = cal.stdout.strip()
+
+    buf = io.StringIO()
+    w = buf.write
+    w("# EXPERIMENTS — Chiplet Actuary reproduction + multi-pod framework\n\n")
+    w("All numbers regenerate with:\n```\n")
+    w("PYTHONPATH=src python scripts/calibrate.py\n")
+    w("PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both "
+      "--out results/dryrun_optimized.json\n")
+    w("PYTHONPATH=src python -m benchmarks.run\n")
+    w("PYTHONPATH=src python scripts/make_experiments.py\n```\n\n")
+
+    w("## §Paper validation — the model reproduces the paper's claims\n\n")
+    w("Every quantitative claim in Secs. 4–5 of the paper, checked "
+      "against the model (also asserted in tests/test_paper_claims.py):\n\n")
+    w("```\n" + cal_txt + "\n```\n\n")
+    w("Note (flagged, not hidden): the paper's “6 chiplets / 4 sockets "
+      "→ 119 systems” contradicts its own formula Σᵢ₌₁ᵏ C(n+i−1,i): "
+      "f(6,4)=209; 119 corresponds to f(7,3). We implement the "
+      "formula.\n\n")
+
+    # ---- dry run ----
+    w("## §Dry-run — 10 archs × 4 shapes × {16×16, 2×16×16}\n\n")
+    n_ok = sum(1 for k, v in opt.items()
+               if v["status"] == "ok" and len(k.split("|")) == 3)
+    n_skip = sum(1 for k, v in opt.items()
+                 if v["status"] == "skip" and len(k.split("|")) == 3)
+    n_fail = sum(1 for k, v in opt.items()
+                 if v["status"] == "fail" and len(k.split("|")) == 3)
+    w(f"`lower().compile()` succeeded for **{n_ok} cells** "
+      f"({n_skip} documented skips: `long_500k` on the 8 pure "
+      f"full-attention archs × 2 meshes; {n_fail} failures) — every "
+      "supported (arch × shape) on BOTH meshes. Per-cell "
+      "memory_analysis / cost_analysis / collective schedules: "
+      "`results/dryrun_optimized.json`.\n\n")
+    rows = rows_from(opt, "2x16x16")
+    w("Two-pod (2×16×16 = 512 chips) memory proof (GB/device, "
+      "`memory_analysis()`):\n\n")
+    small = [{"arch": r["arch"], "shape": r["shape"],
+              "GB_per_dev": r["mem_gb_per_dev"], "bound": r["bound"]}
+             for r in rows]
+    w(fmt_rows(small, ["arch", "shape", "GB_per_dev", "bound"]) + "\n\n")
+    over = [r for r in small if r["GB_per_dev"] > 16]
+    w(f"**Memory-fit note:** {len(small)-len(over)}/{len(small)} runnable "
+      "two-pod cells fit the 16 GB/chip HBM budget outright. The "
+      f"{len(over)} over-budget cells are the largest train/prefill "
+      "workloads (236B MoE, 123B dense, 7B-hybrid at batch 256·4k); "
+      "their floor is parameter+optimizer state and remat carries — the "
+      "deployment answer is a 4-pod slice (state halves again) and/or "
+      "smaller per-pod batch, exactly the capacity-vs-cost trade the "
+      "codesign layer prices ($/step scales with fleet size; see "
+      "benchmarks/codesign.py).\n\n")
+
+    # ---- roofline ----
+    w("## §Roofline — three terms per (arch × shape), single pod 16×16\n\n")
+    w("compute = FLOPs/(chips·197TF); memory = HBM bytes/(chips·819GB/s) "
+      "(Pallas-kernel path; the XLA-path number is kept in the JSON); "
+      "collective = bytes/(chips·4·50GB/s). `frac` = MODEL_FLOPS /"
+      "(chips·peak·t_bound) — the MFU-style score. `useful` = "
+      "MODEL_FLOPS / HLO FLOPs (remat/redundancy waste).\n\n")
+    rows = rows_from(opt, "16x16")
+    w(fmt_rows(rows, ["arch", "shape", "bound", "t_compute_s",
+                      "t_memory_s", "t_collective_s", "t_bound_s",
+                      "useful_ratio", "roofline_frac"]) + "\n\n")
+    w("Reading the bottlenecks: train cells are compute/memory-mixed "
+      "with collective pressure from FSDP gathers + grad reduction; "
+      "decode cells are inherently memory-bound (weights+KV per token); "
+      "the per-cell `one sentence on what would move the dominant "
+      "term` lives in the §Perf log and DESIGN.md §8.\n\n")
+
+    # ---- before/after ----
+    if base:
+        w("## §Perf — baseline vs optimized (single-pod t_bound)\n\n")
+        base_rows = {(r["arch"], r["shape"]): r
+                     for r in rows_from(base, "16x16")}
+        comp = []
+        for r in rows_from(opt, "16x16"):
+            b = base_rows.get((r["arch"], r["shape"]))
+            if not b or r["bound"] == "SKIP" or b["t_bound_s"] <= 0:
+                continue
+            comp.append({
+                "arch": r["arch"], "shape": r["shape"],
+                "baseline_t_s": b["t_bound_s"],
+                "optimized_t_s": r["t_bound_s"],
+                "speedup_x": b["t_bound_s"] / max(r["t_bound_s"], 1e-12),
+                "frac_before": b["roofline_frac"],
+                "frac_after": r["roofline_frac"],
+            })
+        comp.sort(key=lambda r: -r["speedup_x"])
+        w(fmt_rows(comp, ["arch", "shape", "baseline_t_s",
+                          "optimized_t_s", "speedup_x", "frac_before",
+                          "frac_after"]) + "\n")
+    w(PERF_LOG)
+
+    (ROOT / "EXPERIMENTS.md").write_text(buf.getvalue())
+    print(f"wrote EXPERIMENTS.md ({len(buf.getvalue())} bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .hlo import HLOCostReport, analyze_hlo_text
+from .roofline import RooflineTerms, roofline_from_report, HW

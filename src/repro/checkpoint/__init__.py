@@ -1,0 +1,2 @@
+from .store import (AsyncCheckpointer, CheckpointManager, latest_step,
+                    restore, save)

@@ -1,0 +1,43 @@
+"""Chiplet Actuary — quantitative cost model (Feng & Ma, DAC 2022) in JAX.
+
+Public API of the paper's contribution:
+
+  technology   -- process-node / integration-technology parameter DB
+  yield_model  -- Eq. (1) yield curves + wafer geometry
+  system       -- module / chip / package algebra (Eq. 3)
+  re_cost      -- recurring cost, Eqs. (4)-(5), five-way breakdown
+  nre_cost     -- non-recurring cost, Eqs. (6)-(8), amortization
+  reuse        -- SCMS / OCME / FSMC scheme builders (Sec. 5)
+  explorer     -- vmapped design-space sweeps and partition search
+  gradient     -- (beyond paper) differentiable partitioning
+  codesign     -- (beyond paper) accelerator perf-per-dollar bridge
+"""
+from .technology import (INTEGRATION_TECHS, PROCESS_NODES, IntegrationTech,
+                         ProcessNode, node, tech)
+from .yield_model import (dies_per_wafer, good_die_cost, raw_die_cost,
+                          yield_murphy, yield_negative_binomial, yield_poisson)
+from .system import (Chip, Module, System, d2d_module, make_chip, soc_system,
+                     split_system)
+from .re_cost import REBreakdown, chip_costs, re_cost, re_cost_split
+from .nre_cost import NREEntities, UnitCost, amortized_costs, group_nre
+from .reuse import (fsmc_enumerate, fsmc_num_systems, fsmc_situations,
+                    ocme_soc_equivalents, ocme_systems, scms_soc_equivalents,
+                    scms_systems)
+from .explorer import (best_partition, cost_area_curve, pareto_front,
+                       sweep_partitions)
+from .codesign import (AcceleratorSpec, accelerator_systems, cost_per_step,
+                       price_accelerators)
+
+__all__ = [
+    "INTEGRATION_TECHS", "PROCESS_NODES", "IntegrationTech", "ProcessNode",
+    "node", "tech", "dies_per_wafer", "good_die_cost", "raw_die_cost",
+    "yield_murphy", "yield_negative_binomial", "yield_poisson", "Chip",
+    "Module", "System", "d2d_module", "make_chip", "soc_system",
+    "split_system", "REBreakdown", "chip_costs", "re_cost", "re_cost_split",
+    "NREEntities", "UnitCost", "amortized_costs", "group_nre",
+    "fsmc_enumerate", "fsmc_num_systems", "fsmc_situations",
+    "ocme_soc_equivalents", "ocme_systems", "scms_soc_equivalents",
+    "scms_systems", "best_partition", "cost_area_curve", "pareto_front",
+    "sweep_partitions", "AcceleratorSpec", "accelerator_systems",
+    "cost_per_step", "price_accelerators",
+]

@@ -1,0 +1,85 @@
+"""Vectorized design-space exploration over the Chiplet Actuary model.
+
+``vmap``-based sweeps over (module area x chiplet count x technology x
+node) grids — the engine behind the Fig. 2/4 benchmarks and the
+partitioning decision method (Sec. 6 takeaway 1: "splitting into two or
+three chiplets is usually sufficient").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .re_cost import re_cost_split
+from .technology import PROCESS_NODES, node, tech
+from .yield_model import raw_die_cost, yield_negative_binomial
+
+
+def cost_area_curve(process: str, areas_mm2: jnp.ndarray, early: bool = False):
+    """Fig. 2: yield and normalized cost/area vs die area for one node.
+
+    Cost is normalized to the cost-per-area of the raw wafer, as in the
+    paper's Fig. 2.
+    """
+    n = node(process)
+    d0 = n.defect_density_early if early else n.defect_density
+    y = yield_negative_binomial(areas_mm2, d0, n.cluster_param)
+    raw = jax.vmap(lambda a: raw_die_cost(a, n.wafer_cost))(areas_mm2)
+    # raw wafer cost per mm^2 (ideal full utilization of a 300mm wafer)
+    per_mm2 = n.wafer_cost / (jnp.pi * 150.0 ** 2)
+    norm_cost = (raw / y) / (areas_mm2 * per_mm2)
+    return {"area": areas_mm2, "yield": y, "norm_cost_per_area": norm_cost}
+
+
+import functools
+
+
+@functools.partial(jax.jit, static_argnames=("tech_arrays",))
+def _split_totals(areas, ns, wafer_cost, d0, cluster, tech_arrays):
+    """(A, N) grid of split totals; tech params passed as scalars."""
+    def one(area):
+        def per_n(n):
+            return re_cost_split(area, n, wafer_cost=wafer_cost,
+                                 defect_density=d0, cluster=cluster,
+                                 tech_params=tech_arrays)["total"]
+        return jax.vmap(per_n)(ns)
+    return jax.vmap(one)(areas)
+
+
+def sweep_partitions(process: str, integration: str,
+                     areas_mm2: Sequence[float],
+                     n_chiplets: Sequence[int], early: bool = False):
+    """RE-cost surface over (module area x number of chiplets) — Fig. 4 data."""
+    n = node(process)
+    t = tech(integration)
+    d0 = n.defect_density_early if early else n.defect_density
+    areas = jnp.asarray(areas_mm2, jnp.float32)
+    ns = jnp.asarray(n_chiplets, jnp.float32)
+    totals = _split_totals(areas, ns, n.wafer_cost, d0, n.cluster_param, t)
+    return {"areas": areas, "n_chiplets": ns, "total": totals}
+
+
+def best_partition(process: str, integration: str, area_mm2: float,
+                   max_chiplets: int = 8, early: bool = False) -> Dict:
+    """Integer argmin over chiplet count for one (node, tech, area)."""
+    ns = list(range(1, max_chiplets + 1))
+    res = sweep_partitions(process, integration, [area_mm2], ns, early=early)
+    totals = jax.device_get(res["total"])[0]
+    i = int(totals.argmin())
+    return {"best_n": ns[i], "best_cost": float(totals[i]),
+            "soc_cost": float(totals[0]),
+            "saving": 1.0 - float(totals[i]) / float(totals[0])}
+
+
+def pareto_front(points: Sequence[Dict], x_key: str, y_key: str) -> List[Dict]:
+    """Lower-left Pareto front (minimize both keys)."""
+    pts = sorted(points, key=lambda p: (p[x_key], p[y_key]))
+    front, best_y = [], float("inf")
+    for p in pts:
+        if p[y_key] < best_y:
+            front.append(p)
+            best_y = p[y_key]
+    return front

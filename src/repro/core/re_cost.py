@@ -1,0 +1,219 @@
+"""RE (recurring engineering) cost model — paper Sec. 3.2, Eqs. (4)-(5).
+
+The total RE cost of a system is broken into the paper's five itemized
+components:
+
+  1. cost of raw chips,
+  2. cost of chip defects,
+  3. cost of raw packages (substrate + interposer/RDL + bonding + assembly),
+  4. cost of package defects,
+  5. cost of wasted known-good-dies (KGDs) destroyed by packaging defects.
+
+Bumping / wafer sort / package test are folded into the raw-chip and
+raw-package terms (the paper includes but does not itemize them).
+
+Two packaging flows (Eq. 5) are modeled; chip-last is the default, as in
+the paper's experiments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+
+from .system import Chip, System
+from .technology import IntegrationTech, node, tech
+from .yield_model import (dies_per_wafer, raw_die_cost,
+                          yield_negative_binomial)
+
+
+@dataclasses.dataclass
+class REBreakdown:
+    """Itemized RE cost of one unit of a system (USD)."""
+
+    raw_chips: float
+    chip_defects: float
+    raw_package: float
+    package_defects: float
+    wasted_kgd: float
+
+    @property
+    def total(self) -> float:
+        return (self.raw_chips + self.chip_defects + self.raw_package
+                + self.package_defects + self.wasted_kgd)
+
+    @property
+    def die_cost(self) -> float:
+        """Cost attributable to silicon (what AMD's Fig. 5 compares)."""
+        return self.raw_chips + self.chip_defects
+
+    @property
+    def packaging_cost(self) -> float:
+        """Footnote 2: raw package + package defects + wasted KGDs."""
+        return self.raw_package + self.package_defects + self.wasted_kgd
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "raw_chips": self.raw_chips,
+            "chip_defects": self.chip_defects,
+            "raw_package": self.raw_package,
+            "package_defects": self.package_defects,
+            "wasted_kgd": self.wasted_kgd,
+            "total": self.total,
+        }
+
+    def scaled(self, f: float) -> "REBreakdown":
+        return REBreakdown(*(f * x for x in dataclasses.astuple(self)))
+
+
+# ---------------------------------------------------------------------------
+# Per-chip silicon cost
+# ---------------------------------------------------------------------------
+
+
+def chip_costs(chip: Chip) -> Dict[str, float]:
+    """Raw die cost, defect overhead and KGD cost for one die."""
+    n = chip.node
+    area = chip.area_mm2
+    raw = float(raw_die_cost(area, n.wafer_cost))
+    # sort + bump folded into the raw die (not itemized, per the paper)
+    raw += n.wafer_sort_cost / float(dies_per_wafer(area))
+    raw += n.bump_cost_per_mm2 * area
+    y_die = float(yield_negative_binomial(area, chip.defect_density,
+                                          n.cluster_param)) * n.wafer_yield
+    kgd = raw / y_die
+    return {"raw": raw, "defect": kgd - raw, "kgd": kgd, "yield": y_die}
+
+
+# ---------------------------------------------------------------------------
+# Package-level model
+# ---------------------------------------------------------------------------
+
+
+def _interposer_cost(system: System) -> tuple[float, float]:
+    """(raw interposer cost, interposer yield y1) for InFO/2.5D, else (0,1).
+
+    When a package design is reused (``package_area_mm2`` forced), the
+    interposer is sized for the *design's* silicon capacity, not for the
+    chips actually bonded — Sec. 5.1: reusing a 4x interposer in a 1x
+    system pays the full 4x interposer.
+    """
+    t = system.tech
+    if t.interposer_area_factor <= 0.0:
+        return 0.0, 1.0
+    design_silicon = system.package_area / t.package_area_factor
+    area = design_silicon * t.interposer_area_factor
+    inode = node(t.interposer_node)
+    raw = area * t.interposer_cost_per_mm2
+    y1 = float(yield_negative_binomial(area, t.interposer_defect_density,
+                                       inode.cluster_param))
+    return raw, y1
+
+
+def _substrate_cost(system: System) -> float:
+    t = system.tech
+    return (system.package_area * t.substrate_cost_per_mm2
+            * t.substrate_layer_factor)
+
+
+def re_cost(system: System, flow: str = "chip-last") -> REBreakdown:
+    """Full Eq. (4)/(5) RE breakdown for one unit of ``system``.
+
+    flow: 'chip-last' (default, paper's choice) or 'chip-first'.
+    """
+    t: IntegrationTech = system.tech
+    n_chips = system.n_chips
+
+    per_chip = [chip_costs(c) for c in system.chips]
+    raw_chips = sum(c["raw"] for c in per_chip)
+    chip_defects = sum(c["defect"] for c in per_chip)
+    kgd_total = sum(c["kgd"] for c in per_chip)
+
+    c_interposer, y1 = _interposer_cost(system)
+    c_substrate = _substrate_cost(system)
+    c_bond = t.bond_cost_per_chip * n_chips
+
+    y2n = t.y2_chip_bond ** n_chips
+    y3 = t.y3_substrate_bond * t.assembly_yield
+
+    if flow == "chip-last":
+        # Eq. (4): the interposer/RDL ("package") is fabricated and yielded
+        # first, then KGDs are bonded (y2 each), then the assembly is mated
+        # to the substrate (y3).
+        raw_package = c_interposer + c_substrate + c_bond
+        package_defects = (c_interposer * (1.0 / (y1 * y2n * y3) - 1.0)
+                           + (c_substrate + c_bond) * (1.0 / y3 - 1.0))
+        wasted_kgd = kgd_total * (1.0 / (y2n * y3) - 1.0)
+    elif flow == "chip-first":
+        # Eq. (5) top: everything rides through the whole flow; KGDs are
+        # exposed to interposer-fab losses as well.
+        y_all = y1 * y2n * y3
+        raw_package = c_interposer + c_substrate + c_bond
+        package_defects = raw_package * (1.0 / y_all - 1.0)
+        wasted_kgd = kgd_total * (1.0 / y_all - 1.0)
+    else:
+        raise ValueError(f"unknown flow {flow!r}")
+
+    return REBreakdown(
+        raw_chips=raw_chips,
+        chip_defects=chip_defects,
+        raw_package=raw_package,
+        package_defects=package_defects,
+        wasted_kgd=wasted_kgd,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Functional (jnp, vmap-able) kernel for homogeneous splits — used by the
+# explorer and the differentiable partitioner.  Mirrors re_cost() for the
+# `split_system` case: `module_area` split into n chiplets with D2D overhead.
+# ---------------------------------------------------------------------------
+
+
+def re_cost_split(module_area_mm2, n_chiplets, *, wafer_cost, defect_density,
+                  cluster, tech_params, d2d_overhead=None):
+    """jnp RE total for an even n-way split; differentiable in areas.
+
+    ``tech_params`` is an :class:`IntegrationTech`; n_chiplets may be a
+    traced float (the differentiable relaxation treats it continuously).
+    Returns a dict of jnp scalars matching REBreakdown fields.
+    """
+    t = tech_params
+    ovh = t.d2d_area_overhead if d2d_overhead is None else d2d_overhead
+    n = n_chiplets
+    chip_area = module_area_mm2 / n
+    is_multi = jnp.asarray(n, jnp.float32) > 1.0
+    chip_area = chip_area * jnp.where(is_multi, 1.0 / (1.0 - ovh), 1.0)
+    silicon = chip_area * n
+
+    raw1 = raw_die_cost(chip_area, wafer_cost)
+    y_die = yield_negative_binomial(chip_area, defect_density, cluster) * 0.99
+    raw_chips = raw1 * n
+    chip_defects = raw1 * (1.0 / y_die - 1.0) * n
+    kgd = raw1 / y_die * n
+
+    interposer_area = silicon * t.interposer_area_factor
+    c_interposer = interposer_area * t.interposer_cost_per_mm2
+    y1 = jnp.where(
+        t.interposer_area_factor > 0,
+        yield_negative_binomial(interposer_area, t.interposer_defect_density, cluster),
+        1.0)
+    c_substrate = (silicon * t.package_area_factor * t.substrate_cost_per_mm2
+                   * t.substrate_layer_factor)
+    c_bond = t.bond_cost_per_chip * n
+
+    y2n = t.y2_chip_bond ** n
+    y3 = t.y3_substrate_bond * t.assembly_yield
+
+    raw_package = c_interposer + c_substrate + c_bond
+    package_defects = (c_interposer * (1.0 / (y1 * y2n * y3) - 1.0)
+                       + (c_substrate + c_bond) * (1.0 / y3 - 1.0))
+    wasted_kgd = kgd * (1.0 / (y2n * y3) - 1.0)
+
+    total = raw_chips + chip_defects + raw_package + package_defects + wasted_kgd
+    return {
+        "raw_chips": raw_chips, "chip_defects": chip_defects,
+        "raw_package": raw_package, "package_defects": package_defects,
+        "wasted_kgd": wasted_kgd, "total": total,
+    }

@@ -1,0 +1,170 @@
+"""Module / Chip / Package abstraction (paper Sec. 3.1, Eq. (3)).
+
+    m_i in {m_1, ..., m_D2D} = M
+    c_i  = Chip({m_i, m_D2D})
+    SoC_j = Package(Chip({m_k1, m_k2, ...}))
+    MCM_j = Package({c_k1, c_k2, ...})
+
+A :class:`Module` is an indivisible group of functional units; the D2D
+interface is a special module automatically attached to every chiplet (its
+area is a technology-dependent fraction of the chiplet, Sec. 3.2).  A
+:class:`Chip` is a set of modules fabricated on one process node.  A
+:class:`System` is a package holding one chip (SoC) or several chiplets.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .technology import IntegrationTech, ProcessNode, node, tech
+
+D2D_MODULE_PREFIX = "__d2d__"
+
+
+@dataclasses.dataclass(frozen=True)
+class Module:
+    """An indivisible functional block, tied to a process node."""
+
+    name: str
+    area_mm2: float
+    process: str  # key into PROCESS_NODES
+
+    @property
+    def node(self) -> ProcessNode:
+        return node(self.process)
+
+    @property
+    def is_d2d(self) -> bool:
+        return self.name.startswith(D2D_MODULE_PREFIX)
+
+
+def d2d_module(process: str, area_mm2: float) -> Module:
+    """The D2D interface module for one process node (Sec. 3.1: D2D
+    interfaces under different nodes are diverse modules)."""
+    return Module(name=f"{D2D_MODULE_PREFIX}{process}", area_mm2=area_mm2,
+                  process=process)
+
+
+@dataclasses.dataclass(frozen=True)
+class Chip:
+    """A die: a tuple of modules on a single node.
+
+    ``name`` identifies the *design* — two systems containing chips of the
+    same name reuse one NRE effort (chiplet reuse).
+    """
+
+    name: str
+    modules: Tuple[Module, ...]
+    process: str
+    early_defects: bool = False  # use early-ramp defect density (AMD study)
+
+    def __post_init__(self):
+        for m in self.modules:
+            if m.process != self.process:
+                raise ValueError(
+                    f"module {m.name} on {m.process} cannot sit on a "
+                    f"{self.process} chip {self.name}")
+
+    @property
+    def node(self) -> ProcessNode:
+        return node(self.process)
+
+    @property
+    def area_mm2(self) -> float:
+        return float(sum(m.area_mm2 for m in self.modules))
+
+    @property
+    def module_area_mm2(self) -> float:
+        """Area of functional (non-D2D) modules."""
+        return float(sum(m.area_mm2 for m in self.modules if not m.is_d2d))
+
+    @property
+    def defect_density(self) -> float:
+        n = self.node
+        return n.defect_density_early if self.early_defects else n.defect_density
+
+
+def make_chip(name: str, modules: Sequence[Module], process: str,
+              integration: str = "SoC", early_defects: bool = False,
+              d2d_overhead: Optional[float] = None) -> Chip:
+    """Build a chip, automatically attaching the D2D module for multi-chip
+    integration technologies (Sec. 3.2: D2D takes a fixed share of the chip
+    area, 10% in the paper's EPYC-calibrated experiments)."""
+    t = tech(integration)
+    overhead = t.d2d_area_overhead if d2d_overhead is None else d2d_overhead
+    mods = tuple(modules)
+    if overhead > 0.0:
+        func_area = sum(m.area_mm2 for m in mods)
+        # D2D occupies `overhead` fraction of the final chip area:
+        # d2d = overhead/(1-overhead) * functional area.
+        d2d_area = func_area * overhead / (1.0 - overhead)
+        mods = mods + (d2d_module(process, d2d_area),)
+    return Chip(name=name, modules=mods, process=process,
+                early_defects=early_defects)
+
+
+@dataclasses.dataclass(frozen=True)
+class System:
+    """One product: a package with chips inside, made in some quantity."""
+
+    name: str
+    chips: Tuple[Chip, ...]
+    integration: str            # key into INTEGRATION_TECHS
+    quantity: float = 1.0       # production quantity (for NRE amortization)
+    package_name: Optional[str] = None  # shared name => package reuse
+    package_area_mm2: Optional[float] = None  # forced area (package reuse)
+
+    @property
+    def tech(self) -> IntegrationTech:
+        return tech(self.integration)
+
+    @property
+    def silicon_area_mm2(self) -> float:
+        return float(sum(c.area_mm2 for c in self.chips))
+
+    @property
+    def package_area(self) -> float:
+        if self.package_area_mm2 is not None:
+            return self.package_area_mm2
+        return self.silicon_area_mm2 * self.tech.package_area_factor
+
+    @property
+    def package_id(self) -> str:
+        """Identity of the package *design* for NRE sharing."""
+        return self.package_name or f"pkg:{self.name}"
+
+    @property
+    def n_chips(self) -> int:
+        return len(self.chips)
+
+
+def soc_system(name: str, module_area_mm2: float, process: str,
+               quantity: float = 1.0, early_defects: bool = False) -> System:
+    """Monolithic SoC holding `module_area` worth of modules on one die."""
+    m = Module(name=f"{name}_modules", area_mm2=module_area_mm2, process=process)
+    chip = make_chip(f"{name}_die", [m], process, integration="SoC",
+                     early_defects=early_defects)
+    return System(name=name, chips=(chip,), integration="SoC", quantity=quantity)
+
+
+def split_system(name: str, module_area_mm2: float, process: str,
+                 n_chiplets: int, integration: str, quantity: float = 1.0,
+                 early_defects: bool = False,
+                 d2d_overhead: Optional[float] = None,
+                 reuse_chiplet: bool = False) -> System:
+    """Partition `module_area` evenly into n chiplets (Fig. 4 experiments).
+
+    ``reuse_chiplet=True`` gives every chiplet the same design name so NRE
+    is paid once (homogeneous split); otherwise each slice is its own design
+    (the paper's Fig. 4/6 'no reuse' assumption).
+    """
+    per = module_area_mm2 / n_chiplets
+    chips = []
+    for i in range(n_chiplets):
+        cname = f"{name}_slice" if reuse_chiplet else f"{name}_slice{i}"
+        m = Module(name=f"{cname}_modules", area_mm2=per, process=process)
+        chips.append(make_chip(cname, [m], process, integration=integration,
+                               early_defects=early_defects,
+                               d2d_overhead=d2d_overhead))
+    return System(name=name, chips=tuple(chips), integration=integration,
+                  quantity=quantity)

@@ -1,0 +1,2 @@
+from .pipeline import (BinaryShardWriter, DataConfig, make_batches,
+                       synthetic_batch, TokenDataset)

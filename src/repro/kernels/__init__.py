@@ -1,0 +1,7 @@
+from . import ops, ref
+from .flash_attention import flash_attention_fwd
+from .flash_decode import flash_decode
+from .mamba_scan import mamba_scan
+from .moe_gmm import gmm
+from .rmsnorm import rmsnorm
+from .slstm_cell import slstm_seq

@@ -1,0 +1,110 @@
+"""Flash attention (forward) as a Pallas TPU kernel.
+
+Dataflow: grid (B, H, nQ, nK) with the KV-block axis innermost; VMEM
+scratch carries the online-softmax state (m, l, acc) across KV blocks,
+so HBM traffic is O(S·D) per head instead of O(S²).  Tiling:
+
+  q block   (1, 1, BQ, D)   BQ = 128 rows   (MXU-aligned)
+  kv block  (1, 1, BK, D)   BK = 128 rows
+  acc       (BQ, D) fp32 in VMEM; m/l (BQ, 1) fp32
+
+GQA is native: the KV index map divides the head index by the group
+size — no KV head duplication (the XLA fallback has to repeat KV to
+keep GSPMD sharding happy; the kernel does not).
+
+Causality skips whole blocks past the diagonal (the `pl.when` guard) —
+~2x fewer FLOPs at long sequence.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, bq: int, bk: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * bq
+    k_start = ik * bk
+    # causal: a block strictly above the diagonal contributes nothing —
+    # skip its compute (and its share of FLOPs) entirely.
+    run = (k_start <= q_start + bq - 1) if causal else (ik >= 0)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (BQ, D)
+        k = k_ref[0, 0].astype(jnp.float32)            # (BK, D)
+        v = v_ref[0, 0].astype(jnp.float32)            # (BK, Dv)
+        s = (q @ k.T) * scale                          # (BQ, BK)
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bk), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]                            # (BQ, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)                 # (BQ, 1)
+        l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True, scale=None,
+                        bq: int = 128, bk: int = 128,
+                        interpret: bool = False):
+    """q:(B,H,S,D) k/v:(B,Hkv,T,D) -> (B,H,S,Dv)."""
+    b, h, s, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    group = h // hkv
+    scale = d ** -0.5 if scale is None else scale
+    bq = min(bq, s)
+    bk = min(bk, t)
+    assert s % bq == 0 and t % bk == 0, (s, bq, t, bk)
+
+    grid = (b, h, s // bq, t // bk)
+    kernel = functools.partial(_kernel, scale=scale, causal=causal,
+                               bq=bq, bk=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bb, hh, iq, ik: (bb, hh, iq, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, hh, iq, ik, g=group: (bb, hh // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk, dv),
+                         lambda bb, hh, iq, ik, g=group: (bb, hh // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dv),
+                               lambda bb, hh, iq, ik: (bb, hh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),    # m
+            pltpu.VMEM((bq, 1), jnp.float32),    # l
+            pltpu.VMEM((bq, dv), jnp.float32),   # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

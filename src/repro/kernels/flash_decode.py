@@ -1,0 +1,96 @@
+"""Flash decode (one query token vs a long KV cache) as a Pallas kernel.
+
+Grid (B, H, nT): the cache-block axis innermost, online-softmax state in
+VMEM — the single-token specialization of flash attention where the
+whole point is streaming a 32k..500k cache through VMEM once.  A
+`kv_len` scalar (prefetched to SMEM conceptually; here an int32 operand)
+masks the unwritten tail of the cache, so one compiled kernel serves any
+fill level — what the continuous-batching engine needs.
+
+q block (1,1,1,D) is repeated across cache blocks; KV blocks are
+(1,1,BK,D) with the GQA head-divide in the index map.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, bk: int):
+    ib = pl.program_id(0)
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[ib]
+    k_start = ik * bk
+
+    @pl.when(k_start < kv_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (1, D)
+        k = k_ref[0, 0].astype(jnp.float32)            # (BK, D)
+        v = v_ref[0, 0].astype(jnp.float32)            # (BK, Dv)
+        s = (q @ k.T) * scale                          # (1, BK)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        s = jnp.where(kpos < kv_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode(q, k, v, kv_len, *, scale=None, bk: int = 256,
+                 interpret: bool = False):
+    """q:(B,H,D) k/v:(B,Hkv,T,D) kv_len:(B,) -> (B,H,Dv)."""
+    b, h, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    group = h // hkv
+    scale = d ** -0.5 if scale is None else scale
+    bk = min(bk, t)
+    assert t % bk == 0, (t, bk)
+
+    grid = (b, h, t // bk)
+    kernel = functools.partial(_kernel, scale=scale, bk=bk)
+    q4 = q[:, :, None, :]                              # (B,H,1,D)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),     # kv_len (B,) scalar
+            pl.BlockSpec((1, 1, 1, d), lambda bb, hh, ik: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, hh, ik, g=group: (bb, hh // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk, dv),
+                         lambda bb, hh, ik, g=group: (bb, hh // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, dv),
+                               lambda bb, hh, ik: (bb, hh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), q4, k, v)[:, :, 0, :]

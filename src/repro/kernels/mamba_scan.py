@@ -1,0 +1,95 @@
+"""Chunked Mamba2 SSD scan as a Pallas kernel.
+
+Grid (B, H, nChunks): the chunk axis innermost; the (N, P) state matrix
+lives in VMEM scratch and is carried across chunks — the inter-chunk
+recurrence never touches HBM.  Per chunk (L = chunk length):
+
+  intra:  (C·Bᵀ ⊙ decay ⊙ dt) @ X       one (L,L)x(L,P) MXU matmul
+  inter:  exp(cum) ⊙ (C @ state)        (L,N)x(N,P)
+  state:  exp(cum_L)·state + (B ⊙ dt·exp(cum_L - cum))ᵀ @ X
+
+B/C are head-shared (G=1): their blocks ignore the head grid index, so
+VMEM holds one (L, N) copy per chunk regardless of head count.
+
+TPU alignment: L=128 chunk, N=64..128 state, P=64 headdim — all MXU
+native tile multiples.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *,
+            chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)          # (L, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)           # (L,)
+    a = a_ref[0, 0]                                    # scalar -exp(A_log)
+    bm = b_ref[0].astype(jnp.float32)                  # (L, N)
+    cm = c_ref[0].astype(jnp.float32)                  # (L, N)
+
+    da = dt * a                                        # (L,)
+    cum = jnp.cumsum(da)                               # (L,)
+    # decay[t, s] = exp(cum_t - cum_s) for s <= t
+    seg = cum[:, None] - cum[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where(tri, jnp.exp(seg), 0.0)          # (L, L)
+
+    cb = cm @ bm.T                                     # (L, L) head-shared
+    y_intra = (cb * decay * dt[None, :]) @ x           # (L, P)
+
+    state = state_ref[...]                             # (N, P)
+    y_inter = (jnp.exp(cum)[:, None] * (cm @ state))   # (L,N)@(N,P)
+
+    total = jnp.exp(cum[-1])
+    w = dt * jnp.exp(cum[-1] - cum)                    # (L,)
+    state_ref[...] = total * state + (bm * w[:, None]).T @ x
+
+    y_ref[0, :, 0, :] = (y_intra + y_inter).astype(y_ref.dtype)
+
+
+def mamba_scan(xh, dt, a_log, bm, cm, *, chunk: int = 128,
+               interpret: bool = False):
+    """xh:(B,S,H,P) dt:(B,S,H) a_log:(H,) bm/cm:(B,S,N) -> (B,S,H,P).
+
+    Returns y only (final state recomputed by the XLA path when needed;
+    the kernel targets the training/prefill hot loop).
+    """
+    b, s, h, p = xh.shape
+    n = bm.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    a = -jnp.exp(a_log.astype(jnp.float32)).reshape(h, 1)
+
+    grid = (b, h, nc)
+    kernel = functools.partial(_kernel, chunk=chunk)
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p),
+                         lambda bb, hh, ic: (bb, ic, hh, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bb, hh, ic: (bb, ic, hh)),
+            pl.BlockSpec((1, 1), lambda bb, hh, ic: (hh, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bb, hh, ic: (bb, ic, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bb, hh, ic: (bb, ic, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, p),
+                               lambda bb, hh, ic: (bb, ic, hh, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, h, p), xh.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(xh, dt, a, bm, cm)
+    return y, None

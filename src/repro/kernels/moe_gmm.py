@@ -1,0 +1,62 @@
+"""Grouped (per-expert) matmul as a Pallas kernel.
+
+(E, C, D) @ (E, D, F) -> (E, C, F): grid (E, nC, nF, nD) with the
+contraction axis innermost and an fp32 (BC, BF) accumulator in VMEM —
+the standard blocked matmul, batched over the expert axis so one kernel
+launch serves the whole expert buffer after MoE dispatch.
+
+Block sizes default to the MXU-native 128; C (capacity) is padded by
+the wrapper when needed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref):
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += x_ref[0].astype(jnp.float32) @ \
+        w_ref[0].astype(jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _fin():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def gmm(x, w, *, bc: int = 128, bf: int = 128, bd: int = 128,
+        interpret: bool = False):
+    """(E,C,D) @ (E,D,F) -> (E,C,F)."""
+    e, c, d = x.shape
+    f = w.shape[-1]
+    bc, bf, bd = min(bc, c), min(bf, f), min(bd, d)
+    pc = (-c) % bc
+    if pc:
+        x = jnp.pad(x, ((0, 0), (0, pc), (0, 0)))
+    assert d % bd == 0 and f % bf == 0, (d, bd, f, bf)
+    cp = c + pc
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(e, cp // bc, f // bf, d // bd),
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda ee, ic, jf, kd: (ee, ic, kd)),
+            pl.BlockSpec((1, bd, bf), lambda ee, ic, jf, kd: (ee, kd, jf)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf),
+                               lambda ee, ic, jf, kd: (ee, ic, jf)),
+        out_shape=jax.ShapeDtypeStruct((e, cp, f), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+        interpret=interpret,
+    )(x, w)
+    return out[:, :c] if pc else out

@@ -1,0 +1,127 @@
+"""jit'd public wrappers over the Pallas kernels.
+
+Every op takes ``impl``: "pallas" (the TPU kernel; ``interpret=True``
+under tests on CPU) or "xla" (the pure-jnp oracle — also the dry-run
+lowering path, since Pallas-TPU cannot lower on the CPU backend).
+
+``flash_attention`` carries a custom_vjp whose backward is the oracle's
+VJP: training through the Pallas forward is exact; a dedicated Pallas
+backward kernel is a further optimization, not a correctness need.
+
+Model-zoo layouts (B,S,H,D) are converted to kernel layouts (B,H,S,D)
+here so call sites stay clean.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention_fwd
+from .flash_decode import flash_decode as _flash_decode
+from .mamba_scan import mamba_scan as _mamba_scan
+from .moe_gmm import gmm as _gmm
+from .rmsnorm import rmsnorm as _rmsnorm
+from .slstm_cell import slstm_seq as _slstm_seq
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# flash attention (B,S,H,D) public layout
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash_attn_core(q, k, v, causal, scale, interpret):
+    return flash_attention_fwd(q, k, v, causal=causal, scale=scale,
+                               interpret=interpret)
+
+
+def _flash_attn_fwd_rule(q, k, v, causal, scale, interpret):
+    out = _flash_attn_core(q, k, v, causal, scale, interpret)
+    return out, (q, k, v)
+
+
+def _flash_attn_bwd_rule(causal, scale, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.attention_ref(q_, k_, v_, causal=causal,
+                                             scale=scale), q, k, v)
+    return vjp(g)
+
+
+_flash_attn_core.defvjp(_flash_attn_fwd_rule, _flash_attn_bwd_rule)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale=None,
+                    impl: str = "pallas", interpret: Optional[bool] = None):
+    """q:(B,S,H,D) k/v:(B,T,Hkv,D) -> (B,S,H,Dv)."""
+    interp = _on_cpu() if interpret is None else interpret
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    if impl == "xla":
+        out = ref.attention_ref(qt, kt, vt, causal=causal, scale=scale)
+    else:
+        out = _flash_attn_core(qt, kt, vt, causal, scale, interp)
+    return jnp.swapaxes(out, 1, 2)
+
+
+def flash_decode(q, k, v, kv_len, *, scale=None, impl: str = "pallas",
+                 interpret: Optional[bool] = None):
+    """q:(B,1,H,D) k/v:(B,T,Hkv,D) kv_len:(B,) -> (B,1,H,Dv)."""
+    interp = _on_cpu() if interpret is None else interpret
+    qk = q[:, 0].swapaxes(1, 1)                        # (B,H,D)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    if impl == "xla":
+        out = ref.decode_ref(qk, kt, vt, kv_len, scale=scale)
+    else:
+        out = _flash_decode(qk, kt, vt, kv_len, scale=scale,
+                            interpret=interp)
+    return out[:, None]
+
+
+def mamba_scan(xh, dt, a_log, bm, cm, *, chunk: int = 128,
+               impl: str = "pallas", interpret: Optional[bool] = None):
+    """Chunked SSD; signature mirrors models.ssm.ssd_chunked."""
+    interp = _on_cpu() if interpret is None else interpret
+    if impl == "xla":
+        return ref.ssd_ref(xh, dt, a_log, bm, cm)
+    return _mamba_scan(xh, dt, a_log, bm, cm, chunk=chunk,
+                       interpret=interp)
+
+
+def moe_gmm(x, w, *, impl: str = "pallas",
+            interpret: Optional[bool] = None):
+    interp = _on_cpu() if interpret is None else interpret
+    if impl == "xla":
+        return ref.gmm_ref(x, w)
+    return _gmm(x, w, interpret=interp)
+
+
+def fused_rmsnorm(x, scale, *, eps: float = 1e-5, impl: str = "pallas",
+                  interpret: Optional[bool] = None):
+    interp = _on_cpu() if interpret is None else interpret
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    if impl == "xla":
+        out = ref.rmsnorm_ref(x2, scale, eps)
+    else:
+        out = _rmsnorm(x2, scale, eps=eps, interpret=interp)
+    return out.reshape(shape)
+
+
+def slstm_seq(xg, r, bias, *, impl: str = "pallas",
+              interpret: Optional[bool] = None):
+    """Fused sLSTM over a sequence: xg:(B,S,4,H,Dh) -> h:(B,S,H,Dh)."""
+    interp = _on_cpu() if interpret is None else interpret
+    if impl == "xla":
+        return ref.slstm_seq_ref(xg, r, bias)
+    return _slstm_seq(xg, r, bias, interpret=interp)

@@ -1,0 +1,112 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Deliberately naive implementations — quadratic attention, materialized
+decay matrices, per-expert loops — independent of the model-zoo code so
+kernel bugs cannot hide behind shared helpers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale=None):
+    """q:(B,H,S,D) k/v:(B,Hkv,T,D) -> (B,H,S,Dv); GQA by head repeat."""
+    b, h, s, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    scale = d ** -0.5 if scale is None else scale
+    if hkv != h:
+        k = jnp.repeat(k, h // hkv, axis=1)
+        v = jnp.repeat(v, h // hkv, axis=1)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, t), bool), t - s)
+        logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_ref(q, k, v, kv_len=None, scale=None):
+    """q:(B,H,D) k/v:(B,Hkv,T,D) -> (B,H,Dv)."""
+    b, h, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    scale = d ** -0.5 if scale is None else scale
+    if hkv != h:
+        k = jnp.repeat(k, h // hkv, axis=1)
+        v = jnp.repeat(v, h // hkv, axis=1)
+    logits = jnp.einsum("bhd,bhtd->bht", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if kv_len is not None:
+        mask = jnp.arange(t)[None, None, :] < kv_len[:, None, None]
+        logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bht,bhtd->bhd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_ref(xh, dt, a_log, bm, cm):
+    """Sequential-recurrence oracle for the chunked SSD kernel.
+
+    xh:(B,S,H,P) dt:(B,S,H) a_log:(H,) bm/cm:(B,S,N) -> (B,S,H,P), final
+    state (B,H,N,P).  Direct h_t = exp(dt*A) h_{t-1} + dt*B x recurrence.
+    """
+    b, s, h, p = xh.shape
+    n = bm.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))
+
+    def step(state, inp):
+        x_t, dt_t, b_t, c_t = inp
+        decay = jnp.exp(dt_t * a[None, :])[..., None, None]  # (B,H,1,1)
+        upd = jnp.einsum("bn,bh,bhp->bhnp", b_t.astype(jnp.float32),
+                         dt_t.astype(jnp.float32), x_t.astype(jnp.float32))
+        state = state * decay + upd
+        y = jnp.einsum("bn,bhnp->bhp", c_t.astype(jnp.float32), state)
+        return state, y
+
+    state0 = jnp.zeros((b, h, n, p), jnp.float32)
+    state, ys = jax.lax.scan(
+        step, state0,
+        (jnp.moveaxis(xh, 1, 0), jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+         jnp.moveaxis(bm, 1, 0), jnp.moveaxis(cm, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1).astype(xh.dtype), state
+
+
+def gmm_ref(x, w):
+    """Grouped matmul oracle: (E,C,D) @ (E,D,F) -> (E,C,F)."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-5):
+    """(N,D),(D,) -> (N,D)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def slstm_seq_ref(xg, r, bias):
+    """Sequential sLSTM oracle. xg:(B,S,4,H,Dh) r:(4,H,Dh,Dh)."""
+    b, s, _, h, dh = xg.shape
+    state = {k: jnp.zeros((b, h, dh), jnp.float32)
+             for k in ("c", "n", "h", "m")}
+
+    def step(st, xg_t):
+        rec = jnp.einsum("bhd,ghde->bghe", st["h"], r.astype(jnp.float32))
+        g = xg_t.astype(jnp.float32) + rec + bias.astype(jnp.float32)[None]
+        zt = jnp.tanh(g[:, 0])
+        it = g[:, 1]
+        ft = jax.nn.log_sigmoid(g[:, 2])
+        ot = jax.nn.sigmoid(g[:, 3])
+        m_new = jnp.maximum(ft + st["m"], it)
+        i_ = jnp.exp(it - m_new)
+        f_ = jnp.exp(ft + st["m"] - m_new)
+        c_new = f_ * st["c"] + i_ * zt
+        n_new = f_ * st["n"] + i_
+        h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+        return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}, h_new
+
+    _, hs = jax.lax.scan(step, state, jnp.moveaxis(xg, 1, 0))
+    return jnp.moveaxis(hs, 0, 1).astype(xg.dtype)

@@ -1,0 +1,204 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any jax import (device count
+# locks on first init), which is why this module has no __future__ import
+# and the docstring sits below.
+
+DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell we build the EXACT production step function (train /
+prefill / serve), attach NamedShardings to ShapeDtypeStruct stand-ins
+(zero allocation), ``.lower().compile()`` it on the 16x16 single-pod and
+2x16x16 two-pod meshes, and record:
+
+  * memory_analysis()    — per-device bytes (proves it fits),
+  * cost_analysis()      — XLA's own (loop-body-once) numbers,
+  * analysis.hlo         — trip-count-aware FLOPs / HBM / collective bytes,
+  * analysis.roofline    — the three roofline terms + MODEL_FLOPS ratio.
+
+Results accumulate in a JSON cache (resumable; cells are skipped when
+already present unless --force).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch glm4_9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.json
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.analysis.hlo import analyze_hlo_text
+from repro.analysis.roofline import model_flops, roofline_from_report
+from repro.configs.base import (ARCH_IDS, SHAPES, cell_supported, get_config)
+from repro.launch.mesh import describe, make_production_mesh
+from repro.parallel import sharding as shd
+from repro.parallel import steps as st
+
+DEFAULT_OUT = Path(__file__).resolve().parents[3] / "results" / "dryrun.json"
+
+
+def build_cell(cfg, shape, mesh, rules, overrides=None):
+    """Returns (fn, example_args) for jit lowering of one cell."""
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    if shape.kind == "train":
+        fn = st.make_train_step(cfg, accum=cfg.accum)
+        state = st.abstract_state(cfg, mesh, rules)
+        batch = st.abstract_batch(cfg, shape, mesh, rules, accum=cfg.accum)
+        return fn, (state, batch), {"donate_argnums": (0,)}
+    if shape.kind == "prefill":
+        fn = st.make_prefill_step(cfg, cache_len=shape.seq_len)
+        params = st.abstract_state(cfg, mesh, rules).params
+        batch = st.abstract_batch(cfg, shape, mesh, rules)
+        return fn, (params, batch), {}
+    if shape.kind == "decode":
+        fn = st.make_serve_step(cfg)
+        params = st.abstract_state(cfg, mesh, rules).params
+        batch = st.abstract_batch(cfg, shape, mesh, rules)
+        cache = st.abstract_cache(cfg, shape, mesh, rules)
+        return fn, (params, batch, cache), {"donate_argnums": (2,)}
+    raise ValueError(shape.kind)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides=None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        return {"status": "skip", "reason": why}
+
+    eff_cfg = cfg.replace(**overrides) if overrides else cfg
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = shd.default_rules(multi_pod=multi_pod,
+                              act_shard=eff_cfg.act_shard)
+    t0 = time.time()
+    with mesh, shd.use_mesh(mesh, rules):
+        fn, args, jit_kw = build_cell(cfg, shape, mesh, rules, overrides)
+        lowered = jax.jit(fn, **jit_kw).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    eff = cfg.replace(**overrides) if overrides else cfg
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    rep = analyze_hlo_text(text, score_chunks=(eff.attn_chunk,
+                                               eff.ssm_chunk))
+    mf = model_flops(cfg, shape)
+    terms = roofline_from_report(rep, chips=mesh.devices.size,
+                                 model_flops=mf)
+
+    result = {
+        "status": "ok",
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": int(mesh.devices.size),
+        "t_lower_s": round(t_lower, 2), "t_compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_estimate_gb": round(
+                (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                 + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+                / 1e9, 3),
+        },
+        "xla_cost_analysis": {
+            "flops_per_device_loop_once": ca.get("flops", 0.0),
+            "bytes_accessed_loop_once": ca.get("bytes accessed", 0.0),
+        },
+        "hlo_analysis": rep.as_dict(),
+        "roofline": terms.as_dict(),
+    }
+    return result
+
+
+def cell_key(arch, shape, mesh_label, tag=""):
+    k = f"{arch}|{shape}|{mesh_label}"
+    return f"{k}|{tag}" if tag else k
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", choices=ARCH_IDS)
+    p.add_argument("--shape", choices=list(SHAPES))
+    p.add_argument("--mesh", choices=["single", "multi", "both"],
+                   default="single")
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--force", action="store_true")
+    p.add_argument("--out", type=Path, default=DEFAULT_OUT)
+    p.add_argument("--tag", default="", help="variant tag for perf sweeps")
+    p.add_argument("--override", action="append", default=[],
+                   help="cfg override key=value (e.g. remat=dots)")
+    args = p.parse_args(argv)
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        overrides[k] = v
+
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    args.out.parent.mkdir(parents=True, exist_ok=True)
+    results = {}
+    if args.out.exists():
+        results = json.loads(args.out.read_text())
+
+    failures = 0
+    for a, s, mp in cells:
+        label = "2x16x16" if mp else "16x16"
+        key = cell_key(a, s, label, args.tag)
+        if key in results and results[key].get("status") in ("ok", "skip") \
+                and not args.force:
+            print(f"[cached] {key}: {results[key]['status']}")
+            continue
+        print(f"[run] {key} ...", flush=True)
+        try:
+            res = run_cell(a, s, mp, overrides or None)
+            if overrides:
+                res["overrides"] = overrides
+        except Exception as e:
+            traceback.print_exc()
+            res = {"status": "fail", "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        results[key] = res
+        args.out.write_text(json.dumps(results, indent=1, sort_keys=True))
+        if res["status"] == "ok":
+            r = res["roofline"]
+            print(f"  ok: compile {res['t_compile_s']}s  "
+                  f"mem/dev {res['memory']['peak_estimate_gb']} GB  "
+                  f"bound={r['bound']}  t={r['t_bound']:.4f}s  "
+                  f"frac={r['roofline_fraction']:.3f}")
+        else:
+            print(f"  {res['status']}: {res.get('reason') or res.get('error')}")
+    print(f"done: {len(cells)} cells, {failures} failures -> {args.out}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

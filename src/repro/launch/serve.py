@@ -1,0 +1,67 @@
+"""Serving launcher: continuous-batching engine over a synthetic
+request trace; reports throughput / TTFT / latency percentiles.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch xlstm_125m --smoke \
+      --requests 24 --slots 4
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.models.common import init_params
+from repro.models import api
+from repro.serving import Request, ServeConfig, ServingEngine
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", choices=ARCH_IDS, default="xlstm_125m")
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--requests", type=int, default=16)
+    p.add_argument("--slots", type=int, default=4)
+    p.add_argument("--cache-len", type=int, default=128)
+    p.add_argument("--prompt-len", type=int, default=16)
+    p.add_argument("--max-new", type=int, default=24)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    cfg = cfg.replace(dtype="float32")
+    if cfg.family in ("encdec",):
+        raise SystemExit("serve drives decoder-only archs")
+
+    params = init_params(api.param_spec(cfg), jax.random.PRNGKey(args.seed))
+    engine = ServingEngine(cfg, params,
+                           ServeConfig(n_slots=args.slots,
+                                       cache_len=args.cache_len))
+    rng = np.random.default_rng(args.seed)
+    t0 = time.time()
+    for uid in range(args.requests):
+        plen = int(rng.integers(4, args.prompt_len + 1))
+        prompt = rng.integers(0, cfg.vocab, size=plen).astype(np.int32)
+        engine.submit(Request(uid=uid, prompt=prompt,
+                              max_new_tokens=args.max_new))
+    finished = engine.run_until_drained()
+    dt = time.time() - t0
+    toks = sum(len(r.output) for r in finished)
+    ttft = sorted(r.t_first - r.t_submit for r in finished)
+    lat = sorted(r.t_done - r.t_submit for r in finished)
+    print(f"served {len(finished)} requests, {toks} tokens in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s, {engine.steps} decode ticks)")
+    if finished:
+        print(f"TTFT p50 {ttft[len(ttft)//2]*1e3:.0f}ms  "
+              f"p95 {ttft[int(len(ttft)*0.95)-1]*1e3:.0f}ms   "
+              f"latency p50 {lat[len(lat)//2]*1e3:.0f}ms  "
+              f"p95 {lat[int(len(lat)*0.95)-1]*1e3:.0f}ms")
+    return 0 if len(finished) == args.requests else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,123 @@
+"""Training launcher: the end-to-end driver (runs for real on CPU with
+reduced configs; the same code path is what the dry-run lowers at
+production scale).
+
+Features wired here (the fault-tolerance story):
+  * deterministic data with O(1) skip-ahead  -> restarts never replay
+  * async sharded checkpoints + auto-resume from the newest valid step
+  * elastic restore (checkpoint written on one mesh restores on another)
+  * per-step metrics log (jsonl) + heartbeat file for external watchdogs
+
+Usage (CPU example — ~100M-param model, a few hundred steps):
+  PYTHONPATH=src python -m repro.launch.train --arch xlstm_125m \
+      --steps 300 --batch 8 --seq 256 --ckpt-dir /tmp/ckpt
+  (add --smoke for the reduced config)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import AsyncCheckpointer, CheckpointManager
+from repro.configs.base import ARCH_IDS, get_config
+from repro.data import DataConfig, synthetic_batch
+from repro.launch.mesh import make_mesh
+from repro.parallel import sharding as shd
+from repro.parallel import steps as st
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", choices=ARCH_IDS, default="xlstm_125m")
+    p.add_argument("--smoke", action="store_true",
+                   help="use the reduced config (CPU-friendly)")
+    p.add_argument("--steps", type=int, default=100)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=256)
+    p.add_argument("--lr", type=float, default=3e-4)
+    p.add_argument("--accum", type=int, default=1)
+    p.add_argument("--ckpt-dir", type=Path, default=None)
+    p.add_argument("--ckpt-every", type=int, default=50)
+    p.add_argument("--log", type=Path, default=None)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    cfg = cfg.replace(dtype="float32")     # CPU numerics
+
+    n_dev = len(jax.devices())
+    mesh = make_mesh((n_dev, 1), ("data", "model")) if n_dev > 1 else None
+    rules = shd.default_rules() if mesh else None
+
+    key = jax.random.PRNGKey(args.seed)
+    state = st.init_train_state(cfg, key)
+    step_fn = jax.jit(st.make_train_step(
+        cfg, base_lr=args.lr, warmup=min(20, args.steps // 10 + 1),
+        total_steps=args.steps, accum=args.accum), donate_argnums=(0,))
+
+    dc = DataConfig(seq_len=args.seq, global_batch=args.batch,
+                    vocab=cfg.vocab, seed=args.seed)
+
+    start = 0
+    ckpt = None
+    writer = None
+    if args.ckpt_dir:
+        args.ckpt_dir.mkdir(parents=True, exist_ok=True)
+        ckpt = CheckpointManager(args.ckpt_dir, keep=3)
+        latest = ckpt.latest()
+        if latest is not None:
+            _, state = ckpt.restore_latest(state)
+            start = latest
+            print(f"[resume] restored step {start} from {args.ckpt_dir}")
+        writer = AsyncCheckpointer(ckpt)
+
+    logf = open(args.log, "a") if args.log else None
+    losses = []
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = synthetic_batch(dc, step)
+        jb = {k: jnp.asarray(v) for k, v in batch.items()}
+        if args.accum > 1:
+            jb = {k: v.reshape((args.accum, v.shape[0] // args.accum)
+                               + v.shape[1:]) for k, v in jb.items()}
+        state, metrics = step_fn(state, jb)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if logf:
+            logf.write(json.dumps({"step": step + 1, "loss": loss,
+                                   "lr": float(metrics["lr"]),
+                                   "t": time.time() - t0}) + "\n")
+            logf.flush()
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step+1:5d}  loss {loss:.4f}  "
+                  f"({(time.time()-t0)/(step-start+1):.3f}s/step)")
+        if writer and (step + 1) % args.ckpt_every == 0:
+            writer.submit(step + 1, state)
+        if args.ckpt_dir:
+            (args.ckpt_dir / "heartbeat").write_text(str(time.time()))
+    if writer:
+        writer.submit(args.steps, state)
+        writer.wait()
+        writer.close()
+    if logf:
+        logf.close()
+    first, last = losses[0], float(np.mean(losses[-10:]))
+    floor = float(np.log(cfg.vocab))     # random-stream entropy floor
+    print(f"done: loss {first:.4f} -> {last:.4f} "
+          f"(uniform-token floor ~{floor:.3f})")
+    # success = finite and not diverging; synthetic random tokens sit AT
+    # the entropy floor, so "improvement" is only meaningful vs blow-up
+    ok = np.isfinite(last) and last < max(first * 1.05, floor * 1.1)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,1 @@
+from . import api, attention, common, encdec, mla, moe, ssm, transformer, xlstm

@@ -1,0 +1,108 @@
+"""Family-dispatch API: one uniform surface over the whole model zoo.
+
+The launch / serving / benchmark layers only ever touch:
+
+  param_spec(cfg)                 ParamSpec tree of the model
+  loss_fn(cfg)(params, batch)     scalar loss           [train_* shapes]
+  prefill_fn(cfg)(params, batch)  (last_logits, cache)  [prefill_* shapes]
+  decode_fn(cfg)(params, token, cache, kv_len)          [decode_* shapes]
+  input_spec(cfg, shape)          ParamSpec dict of batch inputs
+  cache_spec(cfg, shape)          ParamSpec tree of the decode cache
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, InputShape
+from .common import ParamSpec
+from . import encdec as ed
+from . import transformer as tf
+
+
+def param_spec(cfg: ArchConfig):
+    if cfg.family == "encdec":
+        return ed.encdec_spec(cfg)
+    return tf.lm_spec(cfg)
+
+
+def loss_fn(cfg: ArchConfig) -> Callable:
+    if cfg.family == "encdec":
+        return lambda params, batch: ed.encdec_loss(cfg, params, batch)
+    return lambda params, batch: tf.lm_loss(cfg, params, batch)
+
+
+def prefill_fn(cfg: ArchConfig, cache_len: int) -> Callable:
+    """cache_len is static (the KV cache capacity to allocate)."""
+    if cfg.family == "encdec":
+        def _encdec_prefill(params, batch):
+            cache = ed.encdec_prefill(cfg, params, batch["frames"])
+            b = batch["frames"].shape[0]
+            bos = jnp.zeros((b, 1), jnp.int32)
+            logits, cache = ed.encdec_decode(cfg, params, bos, cache,
+                                             jnp.zeros((b,), jnp.int32))
+            return logits, cache
+        return _encdec_prefill
+    if cfg.family == "vlm":
+        return lambda params, batch: tf.lm_prefill(
+            cfg, params, batch["tokens"], cache_len,
+            img_embeds=batch.get("img_embeds"))
+    return lambda params, batch: tf.lm_prefill(
+        cfg, params, batch["tokens"], cache_len)
+
+
+def decode_fn(cfg: ArchConfig) -> Callable:
+    if cfg.family == "encdec":
+        return lambda params, token, cache, kv_len: (
+            ed.encdec_decode(cfg, params, token, cache, kv_len))
+    return lambda params, token, cache, kv_len: (
+        tf.lm_decode(cfg, params, token, cache, kv_len))
+
+
+def cache_spec(cfg: ArchConfig, shape: InputShape):
+    if cfg.family == "encdec":
+        return ed.encdec_cache_spec(cfg, shape.global_batch, shape.seq_len)
+    return tf.decode_cache_spec(cfg, shape.global_batch, shape.seq_len)
+
+
+def input_spec(cfg: ArchConfig, shape: InputShape) -> Dict[str, ParamSpec]:
+    """ShapeDtypeStruct-able description of the batch for one cell."""
+    b, s = shape.global_batch, shape.seq_len
+    tok = ("batch", "seq")
+    if shape.kind == "train":
+        if cfg.family == "encdec":
+            return {
+                "frames": ParamSpec((b, s, cfg.d_model),
+                                    ("batch", "seq", "act_embed"),
+                                    cfg.jdtype),
+                "dec_tokens": ParamSpec((b, cfg.dec_len), tok, jnp.int32),
+                "labels": ParamSpec((b, cfg.dec_len), tok, jnp.int32),
+            }
+        if cfg.family == "vlm":
+            p = min(cfg.n_img_patches, s // 2)
+            return {
+                "tokens": ParamSpec((b, s - p), tok, jnp.int32),
+                "img_embeds": ParamSpec((b, p, cfg.d_model),
+                                        ("batch", "seq", "act_embed"),
+                                        cfg.jdtype),
+                "labels": ParamSpec((b, s - p), tok, jnp.int32),
+            }
+        return {"tokens": ParamSpec((b, s), tok, jnp.int32),
+                "labels": ParamSpec((b, s), tok, jnp.int32)}
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            return {"frames": ParamSpec((b, s, cfg.d_model),
+                                        ("batch", "seq", "act_embed"),
+                                        cfg.jdtype)}
+        if cfg.family == "vlm":
+            p = min(cfg.n_img_patches, s // 2)
+            return {"tokens": ParamSpec((b, s - p), tok, jnp.int32),
+                    "img_embeds": ParamSpec((b, p, cfg.d_model),
+                                            ("batch", "seq", "act_embed"),
+                                            cfg.jdtype)}
+        return {"tokens": ParamSpec((b, s), tok, jnp.int32)}
+    if shape.kind == "decode":
+        return {"token": ParamSpec((b, 1), tok, jnp.int32),
+                "kv_len": ParamSpec((b,), ("batch",), jnp.int32)}
+    raise ValueError(shape.kind)

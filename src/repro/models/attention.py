@@ -1,0 +1,216 @@
+"""Grouped-query attention: full, chunked (online-softmax) and decode paths.
+
+Three execution paths share one math definition:
+
+* ``full``    — materializes the (S, S) score matrix; reference/smoke path.
+* ``chunked`` — ``lax.scan`` over KV chunks with a running (max, sum)
+  accumulator: flash-attention dataflow expressed in pure ``lax`` so the
+  multi-pod dry-run lowers it on any backend with O(S·chunk) memory.
+* ``decode``  — one query token against a KV cache (linear in cache len).
+
+The Pallas TPU kernel (kernels/flash_attention.py) implements the same
+contract; ``ops.attention`` dispatches on ``impl={"xla","pallas"}``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec, apply_rope, dense_spec
+
+NEG_INF = -1e30
+
+
+def gqa_spec(d_model: int, n_heads: int, n_kv: int, head_dim: int,
+             qk_head_dim: Optional[int] = None) -> Dict[str, ParamSpec]:
+    qk = qk_head_dim or head_dim
+    return {
+        "wq": ParamSpec((d_model, n_heads, qk), ("embed", "heads", None)),
+        "wk": ParamSpec((d_model, n_kv, qk), ("embed", "kv", None)),
+        "wv": ParamSpec((d_model, n_kv, head_dim), ("embed", "kv", None)),
+        "wo": ParamSpec((n_heads, head_dim, d_model), ("heads", None, "embed")),
+    }
+
+
+def _group(q, n_kv):
+    """(B,S,H,D) -> (B,S,Hkv,G,D)."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def _repeat_kv(k, n_heads):
+    """Duplicate KV heads up to n_heads.
+
+    Under tensor parallelism the (H -> Hkv x G) head-split reshape defeats
+    GSPMD sharding propagation (e.g. 96 heads @16-way cannot split into
+    (8, 12)), forcing q all-gathers.  Repeating KV keeps every einsum's
+    head axis = the sharded q head axis; the repeat itself is sharded the
+    same way.  The Pallas kernel path keeps true GQA indexing instead.
+    """
+    n_kv = k.shape[2]
+    if n_kv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // n_kv, axis=2)
+
+
+def attend_full(q, k, v, *, causal: bool = True,
+                q_offset: int = 0, scale: Optional[float] = None):
+    """Reference attention. q:(B,Sq,H,Dq) k:(B,Sk,Hkv,Dq) v:(B,Sk,Hkv,Dv)."""
+    b, sq, h, dq = q.shape
+    scale = scale if scale is not None else dq ** -0.5
+    k = _repeat_kv(k, h)
+    v = _repeat_kv(v, h)
+    # operands stay in model dtype; the MXU accumulates in f32
+    logits = jnp.einsum("bshd,bthd->bhst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = q_offset + jnp.arange(sq)
+        kpos = jnp.arange(k.shape[1])
+        mask = qpos[:, None] >= kpos[None, :]
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def attend_chunked(q, k, v, *, causal: bool = True, chunk: int = 1024,
+                   q_offset: int = 0, scale: Optional[float] = None):
+    """Online-softmax attention, scanning KV in chunks (flash dataflow)."""
+    b, sq, h, dq = q.shape
+    sk = k.shape[1]
+    dv = v.shape[-1]
+    scale = scale if scale is not None else dq ** -0.5
+    k = _repeat_kv(k, h)
+    v = _repeat_kv(v, h)
+    if sk % chunk != 0:
+        pad = chunk - sk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kvalid = jnp.arange(sk + pad) < sk
+        sk_p = sk + pad
+    else:
+        kvalid = jnp.ones((sk,), bool)
+        sk_p = sk
+    n_chunks = sk_p // chunk
+    qf = q                                            # (B,Sq,H,D)
+    kc = k.reshape(b, n_chunks, chunk, h, dq)
+    vc = v.reshape(b, n_chunks, chunk, h, dv)
+    valc = kvalid.reshape(n_chunks, chunk)
+    qpos = q_offset + jnp.arange(sq)
+
+    def body(carry, inp):
+        m, l, acc = carry                             # running max/sum/out
+        kb, vb, val, ci = inp
+        kpos = ci * chunk + jnp.arange(chunk)
+        logits = jnp.einsum("bshd,bthd->bhst", qf, kb,
+                            preferred_element_type=jnp.float32) * scale
+        mask = val[None, None, None, :]
+        if causal:
+            mask = mask & (qpos[:, None] >= kpos[None, :])[None, None]
+        logits = jnp.where(mask, logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhst,bthd->bhsd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+         valc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]      # (B,H,Sq,Dv)
+    out = jnp.einsum("bhsd->bshd", out)
+    return out.astype(q.dtype)
+
+
+def attend_decode(q, k_cache, v_cache, kv_len=None,
+                  scale: Optional[float] = None):
+    """One-step decode: q (B,1,H,Dq) vs cache (B,T,Hkv,D*).
+
+    ``kv_len`` (B,) masks the still-empty tail of the cache.  When the
+    cache's T axis is sharded, XLA turns the max/sum reductions into
+    partial reductions + all-reduce — the flash-decode pattern.
+    """
+    b, _, h, dq = q.shape
+    t, n_kv = k_cache.shape[1], k_cache.shape[2]
+    scale = scale if scale is not None else dq ** -0.5
+    qg = _group(q, n_kv)[:, 0]                        # (B,N,G,D)
+    logits = jnp.einsum("bngd,btnd->bngt", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    if kv_len is not None:
+        mask = jnp.arange(t)[None] < kv_len[:, None]  # (B,T)
+        logits = jnp.where(mask[:, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bngt,btnd->bngd", w.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, v_cache.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full GQA layer (projections + rope + attention + output)
+# ---------------------------------------------------------------------------
+
+
+def gqa_project_qkv(params, x, positions, rope_theta: float = 10000.0):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dnk->bsnk", x, params["wk"])
+    v = jnp.einsum("bsd,dnk->bsnk", x, params["wv"])
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def gqa_output(params, attn_out):
+    return jnp.einsum("bshd,hdm->bsm", attn_out, params["wo"])
+
+
+def gqa_layer(params, x, positions, *, impl: str = "chunked",
+              rope_theta: float = 10000.0, chunk: int = 1024):
+    q, k, v = gqa_project_qkv(params, x, positions, rope_theta)
+    if impl == "full":
+        o = attend_full(q, k, v)
+    elif impl == "chunked":
+        o = attend_chunked(q, k, v, chunk=chunk)
+    elif impl == "pallas":
+        from ..kernels import ops as kops
+        o = kops.flash_attention(q, k, v, causal=True)
+    else:
+        raise ValueError(f"unknown attention impl {impl!r}")
+    return gqa_output(params, o)
+
+
+def gqa_decode_layer(params, x, cache_k, cache_v, position, kv_len,
+                     rope_theta: float = 10000.0):
+    """Single-token decode; returns (out, new_k, new_v) cache slices."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dnk->bsnk", x, params["wk"])
+    v = jnp.einsum("bsd,dnk->bsnk", x, params["wv"])
+    pos = position[:, None] if position.ndim == 1 else position
+    q = apply_rope(q, pos, rope_theta)
+    k = apply_rope(k, pos, rope_theta)
+    ck = _scatter_kv(cache_k, k, kv_len)
+    cv = _scatter_kv(cache_v, v, kv_len)
+    o = attend_decode(q, ck, cv, kv_len=kv_len + 1)
+    return gqa_output(params, o), ck, cv
+
+
+def _scatter_kv(cache, new, kv_len):
+    """Insert (B,1,N,D) `new` at per-batch position kv_len into (B,T,N,D).
+
+    In-place scatter (buffer-aliased under jit donation): HBM traffic is
+    the written slice, not a full cache rewrite — the jnp.where
+    formulation costs a full cache read+write per layer per token (~100x
+    the useful decode traffic at 32k).
+    """
+    b = cache.shape[0]
+    return cache.at[jnp.arange(b), kv_len].set(
+        new[:, 0].astype(cache.dtype), mode="drop")

@@ -1,0 +1,200 @@
+"""Foundation for the functional model zoo.
+
+Params are plain nested dicts of ``jnp`` arrays.  Every model defines a
+*spec tree* — the same nesting, with :class:`ParamSpec` leaves carrying
+shape, dtype and **logical axis names**.  From one spec tree we derive:
+
+* ``init_params``      — materialized random weights (smoke tests, training);
+* ``abstract_params``  — ``jax.ShapeDtypeStruct`` leaves with a
+  ``NamedSharding`` attached (the multi-pod dry-run: no allocation);
+* ``param_pspecs``     — the ``PartitionSpec`` tree for pjit.
+
+Logical axis vocabulary (mapped to mesh axes by ``parallel.sharding``):
+
+  "vocab"   embedding rows / logits classes
+  "embed"   the d_model axis of weight matrices (FSDP axis)
+  "mlp"     FFN hidden axis (tensor-parallel)
+  "heads"   attention-head axis (tensor-parallel)
+  "kv"      kv-head axis (replicated when it does not divide the mesh)
+  "experts" MoE expert axis (expert-parallel)
+  "layers"  stacked-scan layer axis (never sharded)
+  None      replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Shape + dtype + logical axes of one parameter tensor."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: Any = jnp.float32
+    init: str = "normal"     # "normal" | "zeros" | "ones" | "embed"
+    scale: Optional[float] = None  # override fan-in scale
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes}")
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def spec_map(fn: Callable[[ParamSpec], Any], tree: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_spec)
+
+
+def _fan_in(shape: Tuple[int, ...]) -> int:
+    # Last axis is the output axis by convention; everything else is fan-in.
+    if len(shape) <= 1:
+        return max(shape[0] if shape else 1, 1)
+    return max(int(jnp.prod(jnp.asarray(shape[:-1]))), 1)
+
+
+def init_params(spec_tree: PyTree, key: jax.Array,
+                dtype_override=None) -> PyTree:
+    """Materialize a spec tree into real arrays (truncated-normal fan-in)."""
+    leaves, treedef = jax.tree_util.tree_flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, s in zip(keys, leaves):
+        dt = dtype_override or s.dtype
+        if s.init == "zeros":
+            out.append(jnp.zeros(s.shape, dt))
+        elif s.init == "ones":
+            out.append(jnp.ones(s.shape, dt))
+        else:
+            scale = s.scale
+            if scale is None:
+                scale = 1.0 if s.init == "embed" else 1.0 / math.sqrt(_fan_in(s.shape))
+            out.append((scale * jax.random.truncated_normal(
+                k, -2.0, 2.0, s.shape, jnp.float32)).astype(dt))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(spec_tree: PyTree, sharding_fn=None,
+                    dtype_override=None) -> PyTree:
+    """ShapeDtypeStruct tree; `sharding_fn(axes, shape)` optional."""
+    def one(s: ParamSpec):
+        dt = dtype_override or s.dtype
+        if sharding_fn is None:
+            return jax.ShapeDtypeStruct(s.shape, dt)
+        return jax.ShapeDtypeStruct(s.shape, dt,
+                                    sharding=sharding_fn(s.axes, s.shape))
+    return spec_map(one, spec_tree)
+
+
+def param_axes(spec_tree: PyTree) -> PyTree:
+    return spec_map(lambda s: s.axes, spec_tree)
+
+
+def count_params(spec_tree: PyTree) -> int:
+    total = 0
+    for s in jax.tree_util.tree_leaves(spec_tree, is_leaf=is_spec):
+        total += int(math.prod(s.shape))
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Common neural pieces (pure functions over param dicts)
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_spec(dim: int) -> Dict[str, ParamSpec]:
+    return {"scale": ParamSpec((dim,), ("embed",), init="ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def embed_spec(vocab: int, dim: int) -> Dict[str, ParamSpec]:
+    return {"embedding": ParamSpec((vocab, dim), ("vocab", "embed"),
+                                   init="embed", scale=0.02)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["embedding"], tokens, axis=0)
+
+
+def unembed(params, x):
+    """Logits via the (tied or untied) output table: (..., D) -> (..., V)."""
+    return jnp.einsum("...d,vd->...v", x, params["embedding"])
+
+
+def dense_spec(d_in: int, d_out: int, axes: Tuple[Optional[str], Optional[str]],
+               init: str = "normal") -> ParamSpec:
+    return ParamSpec((d_in, d_out), axes, init=init)
+
+
+def swiglu_spec(d_model: int, d_ff: int) -> Dict[str, ParamSpec]:
+    return {
+        "w_gate": dense_spec(d_model, d_ff, ("embed", "mlp")),
+        "w_up": dense_spec(d_model, d_ff, ("embed", "mlp")),
+        "w_down": dense_spec(d_ff, d_model, ("mlp", "embed")),
+    }
+
+
+def swiglu(params, x):
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, Dh) or (..., S, Dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                     # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    if x.ndim == ang.ndim + 1:                        # has a heads axis
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mask_padded_vocab(logits, vocab: int):
+    """-inf the padded tail of the vocab axis (see ArchConfig.padded_vocab)."""
+    if logits.shape[-1] == vocab:
+        return logits
+    valid = jnp.arange(logits.shape[-1]) < vocab
+    return jnp.where(valid, logits, jnp.asarray(-1e30, logits.dtype))
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean token-level CE in fp32; labels < 0 are ignored."""
+    logits = logits.astype(jnp.float32)
+    valid = labels >= 0 if mask is None else mask & (labels >= 0)
+    safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * valid.astype(jnp.float32)
+    denom = jnp.maximum(valid.sum(), 1)
+    return nll.sum() / denom

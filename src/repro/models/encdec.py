@@ -1,0 +1,190 @@
+"""Encoder-decoder backbone (Whisper-medium class).
+
+The audio conv frontend is a STUB per the brief: ``input_specs`` provides
+precomputed frame embeddings (B, n_frames, D).  The backbone is the real
+thing: a bidirectional encoder stack and a causal decoder stack with
+cross-attention, scan-over-layers like the decoder-only path.
+
+decode shapes: the assigned ``seq_len`` is the number of ENCODER frames;
+the decoder is bounded at cfg.dec_len (Whisper's 448).  ``decode_*``
+shapes lower one decoder token against (self KV cache + frozen cross KV).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import constrain
+from .attention import (attend_chunked, attend_decode, attend_full,
+                        gqa_decode_layer, gqa_spec, gqa_output,
+                        gqa_project_qkv, _scatter_kv)
+from .common import (ParamSpec, cross_entropy, embed, embed_spec,
+                     mask_padded_vocab, rmsnorm, rmsnorm_spec, swiglu,
+                     swiglu_spec, unembed)
+from .transformer import stack_specs, _attn_cache_spec, _remat
+
+
+def _enc_block_spec(cfg) -> Dict:
+    return {"ln1": rmsnorm_spec(cfg.d_model), "ln2": rmsnorm_spec(cfg.d_model),
+            "attn": gqa_spec(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.dh),
+            "ffn": swiglu_spec(cfg.d_model, cfg.d_ff)}
+
+
+def _dec_block_spec(cfg) -> Dict:
+    sp = _enc_block_spec(cfg)
+    sp["ln_x"] = rmsnorm_spec(cfg.d_model)
+    sp["xattn"] = gqa_spec(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.dh)
+    return sp
+
+
+def encdec_spec(cfg) -> Dict:
+    return {
+        "embed": embed_spec(cfg.padded_vocab, cfg.d_model),
+        "dec_pos": ParamSpec((cfg.dec_len, cfg.d_model), (None, "embed"),
+                             scale=0.02),
+        "enc_blocks": stack_specs(_enc_block_spec(cfg), cfg.n_layers),
+        "dec_blocks": stack_specs(_dec_block_spec(cfg), cfg.n_dec_layers),
+        "enc_norm": rmsnorm_spec(cfg.d_model),
+        "final_norm": rmsnorm_spec(cfg.d_model),
+    }
+
+
+def _self_attn(cfg, p, x, positions, causal: bool):
+    q, k, v = gqa_project_qkv(p, x, positions, cfg.rope_theta)
+    if causal:
+        o = attend_chunked(q, k, v, chunk=cfg.attn_chunk)
+    else:
+        o = attend_chunked(q, k, v, causal=False, chunk=cfg.attn_chunk)
+    return gqa_output(p, o)
+
+
+def _cross_attn(cfg, p, x, enc_k, enc_v):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    o = attend_chunked(q, enc_k, enc_v, causal=False, chunk=cfg.attn_chunk)
+    return gqa_output(p, o)
+
+
+def cross_kv(cfg, p, enc_out):
+    k = jnp.einsum("bsd,dnk->bsnk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dnk->bsnk", enc_out, p["wv"])
+    return k, v
+
+
+def encode(cfg, params, frames):
+    """frames: (B, S_enc, D) precomputed embeddings (stub frontend)."""
+    x = constrain(frames.astype(cfg.jdtype), "batch", "seq", "act_embed")
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(h, p):
+        h = h + _self_attn(cfg, p["attn"],
+                           rmsnorm(p["ln1"], h, cfg.norm_eps),
+                           positions, causal=False)
+        h = h + swiglu(p["ffn"], rmsnorm(p["ln2"], h, cfg.norm_eps))
+        return constrain(h, "batch", "seq", "act_embed"), None
+
+    x, _ = jax.lax.scan(_remat(body, cfg), x, params["enc_blocks"])
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def decode_train(cfg, params, enc_out, dec_tokens):
+    """Teacher-forced decoder: (B, S_dec) -> logits (B, S_dec, V)."""
+    b, sd = dec_tokens.shape
+    x = embed(params["embed"], dec_tokens).astype(cfg.jdtype)
+    x = x + params["dec_pos"][None, :sd].astype(cfg.jdtype)
+    positions = jnp.broadcast_to(jnp.arange(sd), (b, sd))
+
+    def body(h, p):
+        h = h + _self_attn(cfg, p["attn"],
+                           rmsnorm(p["ln1"], h, cfg.norm_eps),
+                           positions, causal=True)
+        ek, ev = cross_kv(cfg, p["xattn"], enc_out)
+        h = h + _cross_attn(cfg, p["xattn"],
+                            rmsnorm(p["ln_x"], h, cfg.norm_eps), ek, ev)
+        h = h + swiglu(p["ffn"], rmsnorm(p["ln2"], h, cfg.norm_eps))
+        return constrain(h, "batch", "seq", "act_embed"), None
+
+    x, _ = jax.lax.scan(_remat(body, cfg), x, params["dec_blocks"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return mask_padded_vocab(unembed(params["embed"], x), cfg.vocab)
+
+
+def encdec_loss(cfg, params, batch):
+    """batch: {'frames': (B,S,D), 'dec_tokens': (B,Sd), 'labels': (B,Sd)}."""
+    enc = encode(cfg, params, batch["frames"])
+    logits = decode_train(cfg, params, enc, batch["dec_tokens"])
+    return cross_entropy(logits, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill = encode + cross-KV + BOS; decode = 1 token/step
+# ---------------------------------------------------------------------------
+
+
+def encdec_cache_spec(cfg, batch: int, enc_len: int) -> Dict:
+    dt = cfg.jdtype
+    return {
+        "self": stack_specs(_attn_cache_spec(cfg, batch, cfg.dec_len, dt),
+                            cfg.n_dec_layers),
+        "cross_k": ParamSpec((cfg.n_dec_layers, batch, enc_len,
+                              cfg.n_kv_heads, cfg.dh),
+                             ("layers", "batch", "kv_seq", "kv", None), dt,
+                             init="zeros"),
+        "cross_v": ParamSpec((cfg.n_dec_layers, batch, enc_len,
+                              cfg.n_kv_heads, cfg.dh),
+                             ("layers", "batch", "kv_seq", "kv", None), dt,
+                             init="zeros"),
+    }
+
+
+def encdec_prefill(cfg, params, frames):
+    """Encode audio; build cross-KV; return empty self-cache."""
+    enc = encode(cfg, params, frames)
+    b = enc.shape[0]
+    dt = cfg.jdtype
+
+    def kv_body(_, p):
+        k, v = cross_kv(cfg, p["xattn"], enc)
+        return None, (k.astype(dt), v.astype(dt))
+
+    _, (cks, cvs) = jax.lax.scan(kv_body, None, params["dec_blocks"])
+    self_cache = {
+        "k": jnp.zeros((cfg.n_dec_layers, b, cfg.dec_len, cfg.n_kv_heads,
+                        cfg.dh), dt),
+        "v": jnp.zeros((cfg.n_dec_layers, b, cfg.dec_len, cfg.n_kv_heads,
+                        cfg.dh), dt),
+    }
+    return {"self": self_cache, "cross_k": cks, "cross_v": cvs}
+
+
+def encdec_decode(cfg, params, token, cache, kv_len):
+    """One decoder token. token:(B,1); kv_len:(B,) decoder cache fill."""
+    b = token.shape[0]
+    x = embed(params["embed"], token).astype(cfg.jdtype)
+    pos_emb = jnp.take(params["dec_pos"], jnp.clip(kv_len, 0,
+                                                   cfg.dec_len - 1), axis=0)
+    x = x + pos_emb[:, None, :].astype(cfg.jdtype)
+
+    def body(h, inp):
+        p, ck, cv, xk, xv = inp
+        hn = rmsnorm(p["ln1"], h, cfg.norm_eps)
+        a, nck, ncv = gqa_decode_layer(p["attn"], hn, ck, cv, kv_len, kv_len,
+                                       cfg.rope_theta)
+        h = h + a
+        hn = rmsnorm(p["ln_x"], h, cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", hn, p["xattn"]["wq"])
+        xo = attend_decode(q, xk, xv)
+        h = h + gqa_output(p["xattn"], xo)
+        h = h + swiglu(p["ffn"], rmsnorm(p["ln2"], h, cfg.norm_eps))
+        return h, (nck, ncv)
+
+    x, (nck, ncv) = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache["self"]["k"],
+                  cache["self"]["v"], cache["cross_k"], cache["cross_v"]))
+    new_cache = {"self": {"k": nck, "v": ncv}, "cross_k": cache["cross_k"],
+                 "cross_v": cache["cross_v"]}
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = mask_padded_vocab(unembed(params["embed"], x[:, 0]), cfg.vocab)
+    return logits, new_cache

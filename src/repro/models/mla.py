@@ -1,0 +1,132 @@
+"""Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3).
+
+Keys and values are compressed into a small latent ``c_kv`` (kv_lora_rank)
+plus a per-token shared RoPE key; the decode KV cache stores ONLY the
+latent (+ rope key), and decoding runs in the compressed space via weight
+absorption — the 32k/500k-cache cost win that makes MLA worth modeling.
+
+Train/prefill path decompresses to per-head K/V and reuses the chunked
+flash dataflow from ``attention.py``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attend_chunked, attend_full, NEG_INF
+from .common import ParamSpec, apply_rope, rmsnorm, rmsnorm_spec
+
+
+def mla_spec(d_model: int, n_heads: int, *, q_lora: int, kv_lora: int,
+             qk_nope: int, qk_rope: int, v_head: int) -> Dict[str, ParamSpec]:
+    sp: Dict[str, ParamSpec] = {}
+    if q_lora > 0:
+        sp["wq_a"] = ParamSpec((d_model, q_lora), ("embed", None))
+        sp["q_norm"] = rmsnorm_spec(q_lora)["scale"]
+        sp["wq_b"] = ParamSpec((q_lora, n_heads, qk_nope + qk_rope),
+                               (None, "heads", None))
+    else:
+        sp["wq"] = ParamSpec((d_model, n_heads, qk_nope + qk_rope),
+                             ("embed", "heads", None))
+    sp["wkv_a"] = ParamSpec((d_model, kv_lora + qk_rope), ("embed", None))
+    sp["kv_norm"] = rmsnorm_spec(kv_lora)["scale"]
+    sp["wkv_b"] = ParamSpec((kv_lora, n_heads, qk_nope + v_head),
+                            (None, "heads", None))
+    sp["wo"] = ParamSpec((n_heads, v_head, d_model), ("heads", None, "embed"))
+    return sp
+
+
+def _mla_dims(params):
+    kv_lora = params["kv_norm"].shape[0]
+    n_heads = params["wkv_b"].shape[1]
+    qk_rope = params["wkv_a"].shape[1] - kv_lora
+    if "wq_b" in params:
+        qk_nope = params["wq_b"].shape[2] - qk_rope
+    else:
+        qk_nope = params["wq"].shape[2] - qk_rope
+    v_head = params["wkv_b"].shape[2] - qk_nope
+    return kv_lora, n_heads, qk_nope, qk_rope, v_head
+
+
+def mla_project_q(params, x, positions, rope_theta, qk_nope, qk_rope):
+    if "wq_a" in params:
+        cq = jnp.einsum("bsd,dr->bsr", x, params["wq_a"])
+        cq = rmsnorm({"scale": params["q_norm"]}, cq)
+        q = jnp.einsum("bsr,rhk->bshk", cq, params["wq_b"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    q_nope, q_rope = jnp.split(q, [qk_nope], axis=-1)
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+    return q_nope, q_rope
+
+
+def mla_compress_kv(params, x, positions, rope_theta, kv_lora):
+    ckv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"])
+    c_kv, k_rope = jnp.split(ckv, [kv_lora], axis=-1)
+    c_kv = rmsnorm({"scale": params["kv_norm"]}, c_kv)
+    k_rope = apply_rope(k_rope, positions, rope_theta)  # shared single head
+    return c_kv, k_rope
+
+
+def mla_layer(params, x, positions, *, rope_theta: float = 10000.0,
+              impl: str = "chunked", chunk: int = 1024):
+    """Train/prefill MLA: decompress and run standard attention."""
+    kv_lora, h, qk_nope, qk_rope, v_head = _mla_dims(params)
+    q_nope, q_rope = mla_project_q(params, x, positions, rope_theta,
+                                   qk_nope, qk_rope)
+    c_kv, k_rope = mla_compress_kv(params, x, positions, rope_theta, kv_lora)
+    kv = jnp.einsum("bsr,rhk->bshk", c_kv, params["wkv_b"])
+    k_nope, v = jnp.split(kv, [qk_nope], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  k_nope.shape[:3] + (qk_rope,))], axis=-1)
+    scale = (qk_nope + qk_rope) ** -0.5
+    if impl == "full":
+        o = attend_full(q, k, v, scale=scale)
+    else:
+        o = attend_chunked(q, k, v, chunk=chunk, scale=scale)
+    return jnp.einsum("bshd,hdm->bsm", o, params["wo"])
+
+
+def mla_decode_layer(params, x, cache_ckv, cache_krope, position, kv_len,
+                     rope_theta: float = 10000.0):
+    """Absorbed-weight decode against the COMPRESSED cache.
+
+    cache_ckv: (B,T,kv_lora)  cache_krope: (B,T,qk_rope).
+    Attention runs entirely in latent space: per-head scores are
+    q_nope·W_uk against c_kv, plus the shared rope term; the value read is
+    the latent itself, decompressed once per layer.
+    """
+    kv_lora, h, qk_nope, qk_rope, v_head = _mla_dims(params)
+    pos = position[:, None] if position.ndim == 1 else position
+    q_nope, q_rope = mla_project_q(params, x, pos, rope_theta,
+                                   qk_nope, qk_rope)
+    c_kv, k_rope = mla_compress_kv(params, x, pos, rope_theta, kv_lora)
+
+    t = cache_ckv.shape[1]
+    b = cache_ckv.shape[0]
+    bidx = jnp.arange(b)
+    # in-place latent-cache scatter (see attention._scatter_kv)
+    ckv = cache_ckv.at[bidx, kv_len].set(
+        c_kv[:, 0].astype(cache_ckv.dtype), mode="drop")
+    krope = cache_krope.at[bidx, kv_len].set(
+        k_rope[:, 0].astype(cache_krope.dtype), mode="drop")
+
+    w_uk = params["wkv_b"][:, :, :qk_nope]            # (R,H,Dn)
+    w_uv = params["wkv_b"][:, :, qk_nope:]            # (R,H,Dv)
+    q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, w_uk)[:, 0]  # (B,H,R)
+    scale = (qk_nope + qk_rope) ** -0.5
+    logits = (jnp.einsum("bhr,btr->bht", q_abs.astype(jnp.float32),
+                         ckv.astype(jnp.float32))
+              + jnp.einsum("bhk,btk->bht", q_rope[:, 0].astype(jnp.float32),
+                           krope.astype(jnp.float32))) * scale
+    mask = jnp.arange(t)[None] < (kv_len + 1)[:, None]
+    logits = jnp.where(mask[:, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    lat = jnp.einsum("bht,btr->bhr", w, ckv.astype(jnp.float32))
+    o = jnp.einsum("bhr,rhd->bhd", lat, w_uv.astype(jnp.float32))
+    out = jnp.einsum("bhd,hdm->bm", o.astype(x.dtype), params["wo"])
+    return out[:, None, :], ckv, krope

@@ -1,0 +1,135 @@
+"""Fine-grained Mixture-of-Experts (DeepSeekMoE-style).
+
+Shared experts (always-on dense SwiGLU) + routed experts with top-k
+softmax routing, implemented with the sort-based capacity dispatch:
+
+  1. flatten tokens, top-k expert ids per token;
+  2. stable-sort the (token, expert) pairs by expert id;
+  3. position-in-expert = rank within the sorted run; slots >= capacity drop;
+  4. gather into an (E, C, D) buffer, batched expert SwiGLU (einsum over E —
+     expert-parallel under GSPMD), scatter back, weighted combine.
+
+This avoids the O(N·E·C) one-hot dispatch tensor of GShard-style code and
+maps onto the all-to-all the TPU mesh wants.  ``moe_ref`` (dense
+every-expert evaluation) is the oracle for tests; with a generous
+capacity factor the two agree exactly.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec, swiglu, swiglu_spec
+
+
+def moe_spec(d_model: int, n_experts: int, d_ff_expert: int,
+             n_shared: int) -> Dict:
+    sp = {
+        "router": ParamSpec((d_model, n_experts), ("embed", None),
+                            scale=0.02),
+        "w_gate": ParamSpec((n_experts, d_model, d_ff_expert),
+                            ("experts", "embed", "mlp")),
+        "w_up": ParamSpec((n_experts, d_model, d_ff_expert),
+                          ("experts", "embed", "mlp")),
+        "w_down": ParamSpec((n_experts, d_ff_expert, d_model),
+                            ("experts", "mlp", "embed")),
+    }
+    if n_shared > 0:
+        sp["shared"] = swiglu_spec(d_model, d_ff_expert * n_shared)
+    return sp
+
+
+def route(params, x_flat, top_k: int):
+    """Router probs -> (weights, ids), weights renormalized over top-k."""
+    logits = jnp.einsum("nd,de->ne", x_flat.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, top_k)          # (N,k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    return weights, ids, probs
+
+
+def aux_load_balance_loss(probs, ids, n_experts: int):
+    """Switch-style load-balance loss: E * sum_e f_e * p_e."""
+    n = probs.shape[0]
+    counts = jnp.zeros((n_experts,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+    frac = counts / jnp.maximum(ids.size, 1)
+    mean_p = probs.mean(axis=0)
+    return n_experts * jnp.sum(frac * mean_p)
+
+
+def moe_apply(params, x, top_k: int, capacity_factor: float = 1.25,
+              return_aux: bool = False):
+    """x: (B,S,D) -> (B,S,D).  Sort-based dispatch, see module docstring."""
+    from ..parallel.sharding import constrain
+    b, s, d = x.shape
+    e = params["router"].shape[1]
+    n = b * s
+    # Dispatch layout: token rows replicated, FEATURE axis model-sharded
+    # — row gathers/scatters stay local (no per-block all-gather of the
+    # token table); one reshard in, one out.
+    xf = constrain(x.reshape(n, d), None, "mlp")
+    weights, ids, probs = route(params, xf, top_k)
+
+    nk = n * top_k
+    cap = int(max(1, (n * top_k / e) * capacity_factor))
+    flat_ids = ids.reshape(nk)
+    flat_w = weights.reshape(nk)
+    tok = jnp.repeat(jnp.arange(n), top_k)
+
+    order = jnp.argsort(flat_ids, stable=True)
+    s_ids = flat_ids[order]
+    s_tok = tok[order]
+    s_w = flat_w[order]
+    counts = jnp.zeros((e,), jnp.int32).at[flat_ids].add(1)
+    starts = jnp.cumsum(counts) - counts                # exclusive prefix
+    pos = jnp.arange(nk) - starts[s_ids]
+    # over-capacity slots get pos == cap: out of bounds => mode="drop"
+    # on the write, fill 0 on the read — no (NK, D) mask multiplies.
+    pos_c = jnp.where(pos < cap, pos, cap)
+
+    # Gather tokens into the (E, C, D) expert buffer.  The (NK, D)
+    # gather transient is feature-sharded (constrain above), so its
+    # per-device footprint is NK x D/|model| — bounded.
+    gathered = constrain(xf[s_tok], None, "mlp")
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[s_ids, pos_c].add(gathered, mode="drop")
+
+    # Batched expert SwiGLU (einsum over the expert axis => EP shardable).
+    g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    h = jax.nn.silu(g) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+
+    # Weighted combine: scatter-add straight into the (N, D) output
+    # (skips the (NK, D) un-permute buffer and the (N, k, D) sum).
+    slot_out = constrain(
+        out_buf.at[s_ids, pos_c].get(mode="fill", fill_value=0),
+        None, "mlp")
+    y = constrain(jnp.zeros((n, d), x.dtype), None, "mlp").at[s_tok].add(
+        slot_out * s_w[:, None].astype(x.dtype))
+
+    if "shared" in params:
+        y = y + swiglu(params["shared"], xf)
+    y = y.reshape(b, s, d)
+    if return_aux:
+        return y, aux_load_balance_loss(probs, ids, e)
+    return y
+
+
+def moe_ref(params, x, top_k: int):
+    """Oracle: evaluate EVERY expert for every token, dense mixture."""
+    b, s, d = x.shape
+    xf = x.reshape(b * s, d)
+    weights, ids, _ = route(params, xf, top_k)
+    g = jnp.einsum("nd,edf->nef", xf, params["w_gate"])
+    u = jnp.einsum("nd,edf->nef", xf, params["w_up"])
+    h = jax.nn.silu(g) * u
+    all_out = jnp.einsum("nef,efd->ned", h, params["w_down"])  # (N,E,D)
+    sel = jnp.take_along_axis(all_out, ids[..., None], axis=1)  # (N,k,D)
+    y = (sel * weights[..., None]).sum(axis=1).astype(x.dtype)
+    if "shared" in params:
+        y = y + swiglu(params["shared"], xf)
+    return y.reshape(b, s, d)

@@ -1,0 +1,206 @@
+"""Mamba2 (SSD) mixer — chunked parallel scan for train/prefill, O(1)
+recurrent step for decode (the sub-quadratic path behind ``long_500k``).
+
+Chunked SSD (Dao & Gu 2024): split the sequence into chunks of length L;
+within a chunk the state-space kernel is a lower-triangular (L, L) decay
+matrix (quadratic, MXU-friendly); across chunks a cheap ``lax.scan``
+carries the (H, N, P) state.  B/C are group-shared (G=1), so the C·Bᵀ
+inner product is computed once and reused by all heads.
+
+The same math is implemented as a Pallas kernel in kernels/mamba_scan.py;
+``ssd_chunked`` here is both the XLA execution path and the oracle.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec, rmsnorm
+
+
+def mamba_spec(d_model: int, *, expand: int = 2, headdim: int = 64,
+               state: int = 64, conv_width: int = 4) -> Dict[str, ParamSpec]:
+    d_inner = expand * d_model
+    h = d_inner // headdim
+    conv_dim = d_inner + 2 * state                      # x, B, C get conv'd
+    return {
+        "in_proj": ParamSpec((d_model, 2 * d_inner + 2 * state + h),
+                             ("embed", "mlp")),
+        "conv_w": ParamSpec((conv_width, conv_dim), (None, "mlp")),
+        "conv_b": ParamSpec((conv_dim,), ("mlp",), init="zeros"),
+        "A_log": ParamSpec((h,), (None,), init="zeros"),
+        "D": ParamSpec((h,), (None,), init="ones"),
+        "dt_bias": ParamSpec((h,), (None,), init="zeros"),
+        "norm": ParamSpec((d_inner,), ("mlp",), init="ones"),
+        "out_proj": ParamSpec((d_inner, d_model), ("mlp", "embed")),
+    }
+
+
+def _mamba_dims(params):
+    d_model, proj = params["in_proj"].shape
+    h = params["A_log"].shape[0]
+    conv_dim = params["conv_w"].shape[1]
+    state = 0
+    # proj = 2*d_inner + 2*state + h ; conv_dim = d_inner + 2*state
+    d_inner = proj - conv_dim - h
+    state = (conv_dim - d_inner) // 2
+    headdim = d_inner // h
+    return d_inner, h, headdim, state
+
+
+def causal_conv(x, w, b, init_state=None):
+    """Depthwise causal conv. x:(B,S,C), w:(W,C). Returns (y, tail_state)."""
+    width = w.shape[0]
+    if init_state is None:
+        init_state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([init_state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(width))
+    tail = xp[:, xp.shape[1] - (width - 1):, :]
+    return y + b[None, None, :], tail
+
+
+def _segsum(da):
+    """Lower-triangular pairwise sums: out[..., t, s] = sum_{s<r<=t} da_r."""
+    l = da.shape[-1]
+    cs = jnp.cumsum(da, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, a_log, bm, cm, *, chunk: int = 128,
+                init_state=None):
+    """Chunked SSD. xh:(B,S,H,P) dt:(B,S,H) bm/cm:(B,S,N) (group-shared).
+
+    Returns (y:(B,S,H,P), final_state:(B,H,N,P)).
+    """
+    b, s, h, p = xh.shape
+    n = bm.shape[-1]
+    l = min(chunk, s)
+    assert s % l == 0, f"seq {s} not divisible by chunk {l}"
+    nc = s // l
+    a = -jnp.exp(a_log.astype(jnp.float32))            # (H,) negative
+    dt32 = dt.astype(jnp.float32)
+    da = dt32 * a[None, None, :]                       # (B,S,H)
+
+    xc = xh.astype(jnp.float32).reshape(b, nc, l, h, p)
+    dtc = dt32.reshape(b, nc, l, h)
+    dac = da.reshape(b, nc, l, h)
+    bc = bm.astype(jnp.float32).reshape(b, nc, l, n)
+    cc = cm.astype(jnp.float32).reshape(b, nc, l, n)
+
+    # --- intra-chunk (quadratic in l, head-shared C·B^T) ---
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)         # (B,nc,L,L)
+    decay = jnp.exp(_segsum(jnp.moveaxis(dac, -1, 2))) # (B,nc,H,L,L)
+    scores = cb[:, :, None] * decay                    # (B,nc,H,L,L)
+    y_intra = jnp.einsum("bchij,bcjh,bcjhp->bcihp", scores, dtc, xc)
+
+    # --- chunk summaries -> inter-chunk scan ---
+    cum = jnp.cumsum(dac, axis=2)                      # (B,nc,L,H)
+    rem = cum[:, :, -1:, :] - cum                      # decay to chunk end
+    sc = jnp.einsum("bcjn,bcjh,bcjhp->bchnp",
+                    bc, dtc * jnp.exp(rem), xc)        # (B,nc,H,N,P)
+    total = jnp.exp(cum[:, :, -1, :])                  # (B,nc,H)
+
+    if init_state is None:
+        init_state = jnp.zeros((b, h, n, p), jnp.float32)
+
+    def body(state, inp):
+        sc_c, tot_c = inp                              # (B,H,N,P),(B,H)
+        prev = state
+        state = state * tot_c[..., None, None] + sc_c
+        return state, prev
+
+    final, prevs = jax.lax.scan(
+        body, init_state.astype(jnp.float32),
+        (jnp.moveaxis(sc, 1, 0), jnp.moveaxis(total, 1, 0)))
+    prevs = jnp.moveaxis(prevs, 0, 1)                  # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcin,bchnp,bcih->bcihp",
+                         cc, prevs, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y.astype(xh.dtype), final
+
+
+def ssd_step(state, xh, dt, a_log, bm, cm):
+    """Recurrent single-token step. state:(B,H,N,P) xh:(B,H,P) dt:(B,H)."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    da = dt.astype(jnp.float32) * a[None, :]           # (B,H)
+    decay = jnp.exp(da)[..., None, None]
+    upd = jnp.einsum("bn,bh,bhp->bhnp", bm.astype(jnp.float32),
+                     dt.astype(jnp.float32), xh.astype(jnp.float32))
+    new_state = state * decay + upd
+    y = jnp.einsum("bn,bhnp->bhp", cm.astype(jnp.float32), new_state)
+    return new_state, y.astype(xh.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full mixer layer
+# ---------------------------------------------------------------------------
+
+
+def _project(params, x):
+    d_inner, h, headdim, state = _mamba_dims(params)
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, params["in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * state], -1)
+    return z, xbc, dt, (d_inner, h, headdim, state)
+
+
+def mamba_layer(params, x, *, chunk: int = 128, impl: str = "xla"):
+    """Train/prefill Mamba2 mixer over a full sequence.
+
+    Sequences not divisible by the chunk are zero-padded at the END
+    (causal: pad positions cannot affect real outputs) and trimmed.
+    """
+    b, s0, _ = x.shape
+    pad = (-s0) % min(chunk, s0) if s0 else 0
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    b, s, _ = x.shape
+    z, xbc, dt, (d_inner, h, headdim, state) = _project(params, x)
+    xbc, _ = causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xbc = jax.nn.silu(xbc)
+    xh, bm, cm = jnp.split(xbc, [d_inner, d_inner + state], -1)
+    xh = xh.reshape(b, s, h, headdim)
+    dt = jax.nn.softplus(dt + params["dt_bias"][None, None, :])
+    if impl == "pallas":
+        from ..kernels import ops as kops
+        y, _ = kops.mamba_scan(xh, dt, params["A_log"], bm, cm, chunk=chunk)
+    else:
+        y, _ = ssd_chunked(xh, dt, params["A_log"], bm, cm, chunk=chunk)
+    y = y + params["D"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(b, s, d_inner)
+    y = rmsnorm({"scale": params["norm"]}, y * jax.nn.silu(z))
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"])
+    return out[:, :s0] if pad else out
+
+
+def mamba_init_cache(params, batch: int, dtype=jnp.float32):
+    d_inner, h, headdim, state = _mamba_dims(params)
+    width = params["conv_w"].shape[0]
+    conv_dim = params["conv_w"].shape[1]
+    return {
+        "conv": jnp.zeros((batch, width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, h, state, headdim), jnp.float32),
+    }
+
+
+def mamba_decode_layer(params, x, cache):
+    """Single-token step. x:(B,1,D); cache {'conv','ssm'}."""
+    b = x.shape[0]
+    z, xbc, dt, (d_inner, h, headdim, state) = _project(params, x)
+    xbc, conv_state = causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                  init_state=cache["conv"])
+    xbc = jax.nn.silu(xbc)
+    xh, bm, cm = jnp.split(xbc[:, 0], [d_inner, d_inner + state], -1)
+    xh = xh.reshape(b, h, headdim)
+    dt = jax.nn.softplus(dt[:, 0] + params["dt_bias"][None, :])
+    new_ssm, y = ssd_step(cache["ssm"], xh, dt, params["A_log"], bm, cm)
+    y = y + params["D"][None, :, None].astype(y.dtype) * xh
+    y = y.reshape(b, 1, d_inner)
+    y = rmsnorm({"scale": params["norm"]}, y * jax.nn.silu(z))
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"])
+    return out, {"conv": conv_state, "ssm": new_ssm}

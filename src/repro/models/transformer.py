@@ -1,0 +1,604 @@
+"""Decoder-only LM assembly for the dense / MoE / MLA / hybrid / xLSTM
+families.  One spec builder + three entry points per family:
+
+  lm_spec(cfg)                      -> ParamSpec tree (stacked for scan)
+  lm_forward(cfg, params, tokens)   -> logits          (training path)
+  lm_prefill(cfg, params, tokens)   -> (last_logits, cache)
+  lm_decode(cfg, params, tok, cache, kv_len) -> (logits, cache)
+
+Layers are stacked on a leading "layers" axis and executed with
+``lax.scan`` (+ per-layer ``jax.checkpoint`` remat) so the HLO stays
+small enough to compile 88-layer/123B graphs in the multi-pod dry-run.
+
+Caches are ParamSpec trees too (zeros-init), so the dry-run can turn
+them into sharded ShapeDtypeStructs without allocating 500k-token KV.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import constrain
+from .attention import gqa_decode_layer, gqa_layer, gqa_spec
+from .common import (ParamSpec, cross_entropy, embed, embed_spec, is_spec,
+                     mask_padded_vocab, rmsnorm, rmsnorm_spec, spec_map,
+                     swiglu, swiglu_spec, unembed)
+from .mla import mla_decode_layer, mla_layer, mla_spec
+from .moe import moe_apply, moe_spec
+from .ssm import (mamba_decode_layer, mamba_layer, mamba_spec,
+                  _mamba_dims)
+from .xlstm import (mlstm_chunked, mlstm_decode, mlstm_parallel,
+                    mlstm_spec, slstm_decode, slstm_layer, slstm_spec)
+
+
+def stack_specs(tree, n: int):
+    """Prepend a ('layers',) axis of size n to every leaf spec."""
+    return spec_map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes,
+                            dtype=s.dtype, init=s.init, scale=s.scale), tree)
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# Attention + FFN block (dense / mla / moe)
+# ---------------------------------------------------------------------------
+
+
+def _attn_spec(cfg):
+    if cfg.attn == "mla":
+        return mla_spec(cfg.d_model, cfg.n_heads, q_lora=cfg.q_lora,
+                        kv_lora=cfg.kv_lora, qk_nope=cfg.qk_nope,
+                        qk_rope=cfg.qk_rope, v_head=cfg.v_head)
+    return gqa_spec(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.dh)
+
+
+def block_spec(cfg, moe_layer: bool) -> Dict:
+    sp = {"ln1": rmsnorm_spec(cfg.d_model), "ln2": rmsnorm_spec(cfg.d_model),
+          "attn": _attn_spec(cfg)}
+    if moe_layer:
+        sp["ffn"] = moe_spec(cfg.d_model, cfg.n_experts, cfg.d_ff_expert,
+                             cfg.n_shared)
+    else:
+        sp["ffn"] = swiglu_spec(cfg.d_model, cfg.d_ff)
+    return sp
+
+
+def block_apply(cfg, p, x, positions, moe_layer: bool):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.attn == "mla":
+        a = mla_layer(p["attn"], h, positions, rope_theta=cfg.rope_theta,
+                      impl=cfg.attn_impl if cfg.attn_impl != "pallas" else "chunked",
+                      chunk=cfg.attn_chunk)
+    else:
+        a = gqa_layer(p["attn"], h, positions, impl=cfg.attn_impl,
+                      rope_theta=cfg.rope_theta, chunk=cfg.attn_chunk)
+    x = x + a
+    x = constrain(x, "batch", "seq", "act_embed")
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if moe_layer:
+        y = moe_apply(p["ffn"], h, cfg.top_k, cfg.capacity_factor)
+    else:
+        y = swiglu(p["ffn"], h)
+    x = x + y
+    return constrain(x, "batch", "seq", "act_embed")
+
+
+def block_decode(cfg, p, x, cache, position, kv_len):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.attn == "mla":
+        a, ckv, krope = mla_decode_layer(p["attn"], h, cache["ckv"],
+                                         cache["krope"], position, kv_len,
+                                         cfg.rope_theta)
+        new_cache = {"ckv": ckv, "krope": krope}
+    else:
+        a, ck, cv = gqa_decode_layer(p["attn"], h, cache["k"], cache["v"],
+                                     position, kv_len, cfg.rope_theta)
+        new_cache = {"k": ck, "v": cv}
+    x = x + a
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if "router" in p["ffn"]:
+        y = moe_apply(p["ffn"], h, cfg.top_k, capacity_factor=4.0)
+    else:
+        y = swiglu(p["ffn"], h)
+    return x + y, new_cache
+
+
+def _attn_cache_spec(cfg, batch: int, cache_len: int, dtype) -> Dict:
+    if cfg.attn == "mla":
+        return {
+            "ckv": ParamSpec((batch, cache_len, cfg.kv_lora),
+                             ("batch", "kv_seq", None), dtype, init="zeros"),
+            "krope": ParamSpec((batch, cache_len, cfg.qk_rope),
+                               ("batch", "kv_seq", None), dtype, init="zeros"),
+        }
+    return {
+        "k": ParamSpec((batch, cache_len, cfg.n_kv_heads, cfg.dh),
+                       ("batch", "kv_seq", "kv", None), dtype, init="zeros"),
+        "v": ParamSpec((batch, cache_len, cfg.n_kv_heads, cfg.dh),
+                       ("batch", "kv_seq", "kv", None), dtype, init="zeros"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Hybrid (Zamba2-style) and xLSTM structure helpers
+# ---------------------------------------------------------------------------
+
+
+def _hybrid_layout(cfg) -> Tuple[int, int, int]:
+    group = cfg.attn_every
+    n_groups = cfg.n_layers // group
+    rest = cfg.n_layers - n_groups * group
+    return n_groups, group, rest
+
+
+def _mamba_block_spec(cfg) -> Dict:
+    return {"ln": rmsnorm_spec(cfg.d_model),
+            "mixer": mamba_spec(cfg.d_model, expand=cfg.ssm_expand,
+                                headdim=cfg.ssm_headdim, state=cfg.ssm_state)}
+
+
+def _shared_attn_spec(cfg) -> Dict:
+    return {"ln1": rmsnorm_spec(cfg.d_model), "ln2": rmsnorm_spec(cfg.d_model),
+            "attn": gqa_spec(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.dh),
+            "ffn": swiglu_spec(cfg.d_model, cfg.d_ff)}
+
+
+def _xlstm_layout(cfg) -> Tuple[int, int]:
+    group = cfg.slstm_every
+    n_groups = cfg.n_layers // group
+    return n_groups, group
+
+
+# ---------------------------------------------------------------------------
+# Spec builder
+# ---------------------------------------------------------------------------
+
+
+def lm_spec(cfg) -> Dict:
+    sp: Dict[str, Any] = {"embed": embed_spec(cfg.padded_vocab, cfg.d_model),
+                          "final_norm": rmsnorm_spec(cfg.d_model)}
+    if cfg.family in ("dense", "vlm"):
+        sp["blocks"] = stack_specs(block_spec(cfg, False), cfg.n_layers)
+    elif cfg.family == "moe":
+        if cfg.first_dense:
+            sp["dense_blocks"] = stack_specs(
+                {"ln1": rmsnorm_spec(cfg.d_model),
+                 "ln2": rmsnorm_spec(cfg.d_model), "attn": _attn_spec(cfg),
+                 "ffn": swiglu_spec(cfg.d_model, cfg.d_ff)}, cfg.first_dense)
+        sp["blocks"] = stack_specs(block_spec(cfg, True),
+                                   cfg.n_layers - cfg.first_dense)
+    elif cfg.family == "hybrid":
+        n_groups, group, rest = _hybrid_layout(cfg)
+        sp["groups"] = stack_specs(stack_specs(_mamba_block_spec(cfg), group),
+                                   n_groups)
+        if rest:
+            sp["rest"] = stack_specs(_mamba_block_spec(cfg), rest)
+        sp["shared_attn"] = stack_specs(_shared_attn_spec(cfg),
+                                        cfg.n_shared_attn)
+    elif cfg.family == "ssm":
+        n_groups, group = _xlstm_layout(cfg)
+        sp["groups"] = {
+            "mlstm": stack_specs(stack_specs(
+                {"ln": rmsnorm_spec(cfg.d_model),
+                 "mixer": mlstm_spec(cfg.d_model, cfg.n_heads)}, group - 1),
+                n_groups),
+            "slstm": stack_specs(
+                {"ln": rmsnorm_spec(cfg.d_model),
+                 "mixer": slstm_spec(cfg.d_model, cfg.n_heads)}, n_groups),
+        }
+    else:
+        raise ValueError(f"lm_spec does not handle family {cfg.family!r}")
+    return sp
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill shared trunk)
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(cfg, params, tokens, img_embeds=None):
+    x = embed(params["embed"], tokens).astype(cfg.jdtype)
+    if img_embeds is not None:
+        x = jnp.concatenate([img_embeds.astype(cfg.jdtype), x], axis=1)
+    return constrain(x, "batch", "seq", "act_embed")
+
+
+def _trunk(cfg, params, x, positions):
+    """Everything between embedding and final norm (family dispatch)."""
+    if cfg.family in ("dense", "vlm", "moe"):
+        if cfg.family == "moe" and cfg.first_dense:
+            def dense_body(h, p):
+                return block_apply(cfg, p, h, positions, False), None
+            x, _ = jax.lax.scan(_remat(dense_body, cfg), x,
+                                params["dense_blocks"])
+        moe_layer = cfg.family == "moe"
+
+        def body(h, p):
+            return block_apply(cfg, p, h, positions, moe_layer), None
+        x, _ = jax.lax.scan(_remat(body, cfg), x, params["blocks"])
+
+    elif cfg.family == "hybrid":
+        n_groups, group, rest = _hybrid_layout(cfg)
+        shared = params["shared_attn"]
+
+        def mamba_body(h, p):
+            y = mamba_layer(p["mixer"], rmsnorm(p["ln"], h, cfg.norm_eps),
+                            chunk=cfg.ssm_chunk)
+            return constrain(h + y, "batch", "seq", "act_embed"), None
+
+        def group_body(h, inp):
+            gp, gi = inp
+            h, _ = jax.lax.scan(_remat(mamba_body, cfg), h, gp)
+            sel = jax.tree_util.tree_map(
+                lambda s: jax.lax.dynamic_index_in_dim(
+                    s, gi % cfg.n_shared_attn, 0, keepdims=False), shared)
+            h = block_apply(cfg, sel, h, positions, False)
+            return h, None
+
+        x, _ = jax.lax.scan(group_body, x,
+                            (params["groups"], jnp.arange(n_groups)))
+        if rest:
+            x, _ = jax.lax.scan(_remat(mamba_body, cfg), x, params["rest"])
+
+    elif cfg.family == "ssm":
+        def mlstm_body(h, p):
+            y, _ = mlstm_chunked(p["mixer"],
+                                 rmsnorm(p["ln"], h, cfg.norm_eps),
+                                 chunk=cfg.attn_chunk)
+            return constrain(h + y, "batch", "seq", "act_embed"), None
+
+        def group_body(h, gp):
+            h, _ = jax.lax.scan(_remat(mlstm_body, cfg), h, gp["mlstm"])
+            y = slstm_layer(gp["slstm"]["mixer"],
+                            rmsnorm(gp["slstm"]["ln"], h, cfg.norm_eps))
+            return h + y, None
+
+        x, _ = jax.lax.scan(group_body, x, params["groups"])
+    else:
+        raise ValueError(cfg.family)
+    return x
+
+
+def lm_forward(cfg, params, tokens, img_embeds=None):
+    """Full-sequence logits. tokens:(B,S_text) [+ img (B,P,D)] -> (B,S,V)."""
+    x = _embed_inputs(cfg, params, tokens, img_embeds)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    x = _trunk(cfg, params, x, positions)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = mask_padded_vocab(unembed(params["embed"], x), cfg.vocab)
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def lm_loss(cfg, params, batch) -> jnp.ndarray:
+    """batch: {'tokens','labels'[, 'img_embeds']}. Image positions get -1."""
+    img = batch.get("img_embeds")
+    logits = lm_forward(cfg, params, batch["tokens"], img)
+    labels = batch["labels"]
+    if img is not None:
+        pad = jnp.full(img.shape[:2], -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    return cross_entropy(logits, labels)
+
+
+# ---------------------------------------------------------------------------
+# Decode caches
+# ---------------------------------------------------------------------------
+
+
+def decode_cache_spec(cfg, batch: int, cache_len: int) -> Dict:
+    dt = cfg.jdtype
+    if cfg.family in ("dense", "vlm", "moe"):
+        cache: Dict[str, Any] = {"layers": stack_specs(
+            _attn_cache_spec(cfg, batch, cache_len, dt),
+            cfg.n_layers - cfg.first_dense)}
+        if cfg.first_dense:
+            cache["dense_layers"] = stack_specs(
+                _attn_cache_spec(cfg, batch, cache_len, dt), cfg.first_dense)
+        return cache
+    if cfg.family == "hybrid":
+        n_groups, group, rest = _hybrid_layout(cfg)
+        d_inner = cfg.ssm_expand * cfg.d_model
+        h = d_inner // cfg.ssm_headdim
+        conv_dim = d_inner + 2 * cfg.ssm_state
+        mamba_cache = {
+            "conv": ParamSpec((batch, 3, conv_dim), ("batch", None, "mlp"),
+                              dt, init="zeros"),
+            "ssm": ParamSpec((batch, h, cfg.ssm_state, cfg.ssm_headdim),
+                             ("batch", "heads", None, None), jnp.float32,
+                             init="zeros"),
+        }
+        cache = {"groups": stack_specs(stack_specs(mamba_cache, group),
+                                       n_groups),
+                 "attn": stack_specs(
+                     _attn_cache_spec(cfg, batch, cache_len, dt), n_groups)}
+        if rest:
+            cache["rest"] = stack_specs(mamba_cache, rest)
+        return cache
+    if cfg.family == "ssm":
+        n_groups, group = _xlstm_layout(cfg)
+        dh = cfg.d_model // cfg.n_heads
+        mlstm_cache = {
+            "C": ParamSpec((batch, cfg.n_heads, dh, dh),
+                           ("batch", "heads", None, None), jnp.float32,
+                           init="zeros"),
+            "n": ParamSpec((batch, cfg.n_heads, dh),
+                           ("batch", "heads", None), jnp.float32, init="zeros"),
+            "m": ParamSpec((batch, cfg.n_heads), ("batch", "heads"),
+                           jnp.float32, init="zeros"),
+        }
+        slstm_cache = {
+            k: ParamSpec((batch, cfg.n_heads, dh), ("batch", "heads", None),
+                         jnp.float32, init="zeros")
+            for k in ("c", "n", "h", "m")
+        }
+        return {"mlstm": stack_specs(stack_specs(mlstm_cache, group - 1),
+                                     n_groups),
+                "slstm": stack_specs(slstm_cache, n_groups)}
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+def lm_prefill(cfg, params, tokens, cache_len: int, img_embeds=None):
+    """Process the prompt; return (last-token logits, populated cache).
+
+    For attention families the per-layer K/V computed during the forward
+    pass are collected as scan outputs and written into the cache.  For
+    recurrent families the final states are the cache.
+    """
+    x = _embed_inputs(cfg, params, tokens, img_embeds)
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    dt = cfg.jdtype
+
+    def pad_to_cache(kv):
+        pad = cache_len - kv.shape[1]
+        return jnp.pad(kv, ((0, 0), (0, pad)) + ((0, 0),) * (kv.ndim - 2))
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        from .attention import gqa_project_qkv
+        from .mla import mla_compress_kv
+
+        def body_with_kv(moe_layer):
+            def body(h, p):
+                hn = rmsnorm(p["ln1"], h, cfg.norm_eps)
+                if cfg.attn == "mla":
+                    ckv, krope = mla_compress_kv(p["attn"], hn, positions,
+                                                 cfg.rope_theta, cfg.kv_lora)
+                    kv_out = {"ckv": pad_to_cache(ckv.astype(dt)),
+                              "krope": pad_to_cache(krope.astype(dt))}
+                else:
+                    _, k, v = gqa_project_qkv(p["attn"], hn, positions,
+                                              cfg.rope_theta)
+                    kv_out = {"k": pad_to_cache(k.astype(dt)),
+                              "v": pad_to_cache(v.astype(dt))}
+                h = block_apply(cfg, p, h, positions, moe_layer)
+                return h, kv_out
+            return body
+
+        cache: Dict[str, Any] = {}
+        if cfg.family == "moe" and cfg.first_dense:
+            x, kv_d = jax.lax.scan(_remat(body_with_kv(False), cfg), x,
+                                   params["dense_blocks"])
+            cache["dense_layers"] = kv_d
+        x, kv = jax.lax.scan(
+            _remat(body_with_kv(cfg.family == "moe"), cfg), x,
+            params["blocks"])
+        cache["layers"] = kv
+
+    elif cfg.family == "hybrid":
+        # Run chunked SSD keeping final states; shared-attn KV per group.
+        n_groups, group, rest = _hybrid_layout(cfg)
+        shared = params["shared_attn"]
+        from .attention import gqa_project_qkv
+        from .ssm import causal_conv, ssd_chunked, _project
+
+        def mamba_body(h, p):
+            hn = rmsnorm(p["ln"], h, cfg.norm_eps)
+            z, xbc, dtp, (d_inner, nh, hd, st) = _project(p["mixer"], hn)
+            xbc_c, conv_tail = causal_conv(xbc, p["mixer"]["conv_w"],
+                                           p["mixer"]["conv_b"])
+            xbc_c = jax.nn.silu(xbc_c)
+            xh, bm, cm = jnp.split(xbc_c, [d_inner, d_inner + st], -1)
+            xh = xh.reshape(b, s, nh, hd)
+            dtp = jax.nn.softplus(dtp + p["mixer"]["dt_bias"][None, None, :])
+            y, state = ssd_chunked(xh, dtp, p["mixer"]["A_log"], bm, cm,
+                                   chunk=cfg.ssm_chunk)
+            y = y + p["mixer"]["D"][None, None, :, None].astype(y.dtype) * xh
+            y = y.reshape(b, s, d_inner)
+            y = rmsnorm({"scale": p["mixer"]["norm"]}, y * jax.nn.silu(z))
+            y = jnp.einsum("bsk,kd->bsd", y, p["mixer"]["out_proj"])
+            st_out = {"conv": conv_tail.astype(dt), "ssm": state}
+            return h + y, st_out
+
+        def group_body(h, inp):
+            gp, gi = inp
+            h, states = jax.lax.scan(_remat(mamba_body, cfg), h, gp)
+            sel = jax.tree_util.tree_map(
+                lambda t: jax.lax.dynamic_index_in_dim(
+                    t, gi % cfg.n_shared_attn, 0, keepdims=False), shared)
+            hn = rmsnorm(sel["ln1"], h, cfg.norm_eps)
+            _, k, v = gqa_project_qkv(sel["attn"], hn, positions,
+                                      cfg.rope_theta)
+            kv = {"k": pad_to_cache(k.astype(dt)),
+                  "v": pad_to_cache(v.astype(dt))}
+            h = block_apply(cfg, sel, h, positions, False)
+            return h, (states, kv)
+
+        x, (g_states, attn_kv) = jax.lax.scan(
+            group_body, x, (params["groups"], jnp.arange(n_groups)))
+        cache = {"groups": g_states, "attn": attn_kv}
+        if rest:
+            x, r_states = jax.lax.scan(_remat(mamba_body, cfg), x,
+                                       params["rest"])
+            cache["rest"] = r_states
+
+    elif cfg.family == "ssm":
+        # Recompute final recurrent states via the decode cells after the
+        # parallel forward (prefill of recurrent nets = run the recurrence;
+        # we fold it into the same scan for the sLSTM and use a one-shot
+        # recurrent pass for the mLSTM states).
+        def mlstm_body(h, p):
+            hn = rmsnorm(p["ln"], h, cfg.norm_eps)
+            y, state = mlstm_chunked(p["mixer"], hn, chunk=cfg.attn_chunk)
+            return constrain(h + y, "batch", "seq", "act_embed"), state
+
+        def group_body(h, gp):
+            h, mstates = jax.lax.scan(_remat(mlstm_body, cfg), h, gp["mlstm"])
+            hn = rmsnorm(gp["slstm"]["ln"], h, cfg.norm_eps)
+            y, sstate = _slstm_layer_with_state(gp["slstm"]["mixer"], hn)
+            return h + y, (mstates, sstate)
+
+        x, (mlstm_states, slstm_states) = jax.lax.scan(group_body, x,
+                                                       params["groups"])
+        cache = {"mlstm": mlstm_states, "slstm": slstm_states}
+    else:
+        raise ValueError(cfg.family)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = mask_padded_vocab(unembed(params["embed"], x[:, -1:, :])[:, 0],
+                               cfg.vocab)
+    return logits, cache
+
+
+def _mlstm_final_state(p, x):
+    """Final (C, n, m) of an mLSTM over x — recurrence in closed form."""
+    b, s, d = x.shape
+    h = p["wi"].shape[1]
+    dh = d // h
+    k = jnp.einsum("bsd,dhk->bhsk", x, p["wk"]).astype(jnp.float32)
+    v = jnp.einsum("bsd,dhk->bhsk", x, p["wv"]).astype(jnp.float32)
+    i, logf = _mlstm_gates_import(p, x)
+    cumf = jnp.cumsum(logf, axis=1)                    # (B,S,H)
+    tail = cumf[:, -1:, :] - cumf                      # decay to seq end
+    w = i + tail                                       # log-weight of each s
+    m = w.max(axis=1)                                  # (B,H)
+    wexp = jnp.exp(w - m[:, None, :])                  # (B,S,H)
+    c = jnp.einsum("bsh,bhsk,bhsv->bhkv", wexp, k, v)
+    n = jnp.einsum("bsh,bhsk->bhk", wexp, k)
+    return {"C": c, "n": n, "m": m}
+
+
+def _mlstm_gates_import(p, x):
+    from .xlstm import _mlstm_gates
+    return _mlstm_gates(p, x)
+
+
+def _slstm_layer_with_state(p, x):
+    from .xlstm import _slstm_cell, slstm_init_cache
+    from .common import rmsnorm as _rms
+    b, s, d = x.shape
+    _, h, dh, _ = p["rh"].shape
+    xg = jnp.einsum("bsd,dghe->bsghe", x, p["wx"])
+    state = slstm_init_cache(p, b)
+
+    def body(st, xg_t):
+        st = _slstm_cell(p, st, xg_t)
+        return st, st["h"]
+
+    state, hs = jax.lax.scan(body, state, jnp.moveaxis(xg, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1)
+    hs = _rms({"scale": p["norm"].reshape(-1)},
+              hs.reshape(b, s, h * dh)).reshape(b, s, h, dh)
+    return jnp.einsum("bshk,hkd->bsd", hs.astype(x.dtype), p["wo"]), state
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def lm_decode(cfg, params, token, cache, kv_len):
+    """One decode step. token:(B,1) int32; kv_len:(B,) current cache fill.
+
+    Returns (logits (B,V), new_cache).
+    """
+    x = embed(params["embed"], token).astype(cfg.jdtype)
+    b = x.shape[0]
+    position = kv_len
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(h, inp):
+            p, c = inp
+            h, nc = block_decode(cfg, p, h, c, position, kv_len)
+            return h, nc
+
+        new_cache: Dict[str, Any] = {}
+        if cfg.family == "moe" and cfg.first_dense:
+            x, nc_d = jax.lax.scan(body, x, (params["dense_blocks"],
+                                             cache["dense_layers"]))
+            new_cache["dense_layers"] = nc_d
+        x, nc = jax.lax.scan(body, x, (params["blocks"], cache["layers"]))
+        new_cache["layers"] = nc
+
+    elif cfg.family == "hybrid":
+        n_groups, group, rest = _hybrid_layout(cfg)
+        shared = params["shared_attn"]
+
+        def mamba_body(h, inp):
+            p, c = inp
+            y, nc = mamba_decode_layer(
+                p["mixer"], rmsnorm(p["ln"], h, cfg.norm_eps), c)
+            return h + y, nc
+
+        def group_body(h, inp):
+            gp, gc, akv, gi = inp
+            h, nstates = jax.lax.scan(mamba_body, h, (gp, gc))
+            sel = jax.tree_util.tree_map(
+                lambda t: jax.lax.dynamic_index_in_dim(
+                    t, gi % cfg.n_shared_attn, 0, keepdims=False), shared)
+            hn = rmsnorm(sel["ln1"], h, cfg.norm_eps)
+            a, ck, cv = gqa_decode_layer(sel["attn"], hn, akv["k"], akv["v"],
+                                         position, kv_len, cfg.rope_theta)
+            h = h + a
+            hn2 = rmsnorm(sel["ln2"], h, cfg.norm_eps)
+            h = h + swiglu(sel["ffn"], hn2)
+            return h, (nstates, {"k": ck, "v": cv})
+
+        x, (g_states, attn_kv) = jax.lax.scan(
+            group_body, x, (params["groups"], cache["groups"],
+                            cache["attn"], jnp.arange(n_groups)))
+        new_cache = {"groups": g_states, "attn": attn_kv}
+        if rest:
+            x, r_states = jax.lax.scan(mamba_body, x,
+                                       (params["rest"], cache["rest"]))
+            new_cache["rest"] = r_states
+
+    elif cfg.family == "ssm":
+        def mlstm_body(h, inp):
+            p, c = inp
+            y, nc = mlstm_decode(p["mixer"],
+                                 rmsnorm(p["ln"], h, cfg.norm_eps), c)
+            return h + y, nc
+
+        def group_body(h, inp):
+            gp, gc_m, gc_s = inp
+            h, m_new = jax.lax.scan(mlstm_body, h, (gp["mlstm"], gc_m))
+            hn = rmsnorm(gp["slstm"]["ln"], h, cfg.norm_eps)
+            y, s_new = slstm_decode(gp["slstm"]["mixer"], hn, gc_s)
+            return h + y, (m_new, s_new)
+
+        x, (m_states, s_states) = jax.lax.scan(
+            group_body, x, (params["groups"], cache["mlstm"],
+                            cache["slstm"]))
+        new_cache = {"mlstm": m_states, "slstm": s_states}
+    else:
+        raise ValueError(cfg.family)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = mask_padded_vocab(unembed(params["embed"], x[:, 0]), cfg.vocab)
+    return logits, new_cache

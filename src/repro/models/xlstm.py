@@ -1,0 +1,265 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel-trainable) and sLSTM
+(scalar memory, strict recurrence) — Beck et al. 2024.
+
+mLSTM's parallel form is attention-like with an input-gate/forget-gate
+decay matrix D[t,s] = i_s + sum_{s<r<=t} log f_r, stabilized by the
+running row max; decode keeps an (N_k, N_v) matrix memory per head with
+O(1)/token updates — the second ``long_500k``-capable family.
+
+sLSTM is a genuine recurrence (lax.scan over time) with exponential
+gating and a normalizer state, as in the paper.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec, rmsnorm, rmsnorm_spec, swiglu, swiglu_spec
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_spec(d_model: int, n_heads: int) -> Dict[str, ParamSpec]:
+    dh = d_model // n_heads
+    return {
+        "wq": ParamSpec((d_model, n_heads, dh), ("embed", "heads", None)),
+        "wk": ParamSpec((d_model, n_heads, dh), ("embed", "heads", None)),
+        "wv": ParamSpec((d_model, n_heads, dh), ("embed", "heads", None)),
+        "wi": ParamSpec((d_model, n_heads), ("embed", "heads"), scale=0.02),
+        "wf": ParamSpec((d_model, n_heads), ("embed", "heads"), scale=0.02),
+        "bi": ParamSpec((n_heads,), ("heads",), init="zeros"),
+        "bf": ParamSpec((n_heads,), ("heads",), init="ones"),
+        "wo": ParamSpec((n_heads, dh, d_model), ("heads", None, "embed")),
+        "norm": ParamSpec((n_heads, dh), ("heads", None), init="ones"),
+    }
+
+
+def _mlstm_gates(params, x):
+    i = jnp.einsum("bsd,dh->bsh", x, params["wi"]) + params["bi"]
+    f = jnp.einsum("bsd,dh->bsh", x, params["wf"]) + params["bf"]
+    return i.astype(jnp.float32), jax.nn.log_sigmoid(f.astype(jnp.float32))
+
+
+def mlstm_parallel(params, x):
+    """Parallel (quadratic) mLSTM over a sequence. x:(B,S,D)."""
+    b, s, d = x.shape
+    h = params["wi"].shape[1]
+    dh = d // h
+    q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bhsk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", x, params["wv"])
+    i, logf = _mlstm_gates(params, x)                  # (B,S,H)
+    cumf = jnp.cumsum(logf, axis=1)                    # (B,S,H)
+    # D[t,s] = i_s + cumf_t - cumf_s  (s <= t)
+    dmat = (i + (-cumf))[:, None, :, :] + cumf[:, :, None, :]  # (B,T,S,H)
+    dmat = jnp.moveaxis(dmat, -1, 1)                   # (B,H,T,S)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    dmat = jnp.where(mask[None, None], dmat, NEG_INF)
+    m = dmat.max(axis=-1, keepdims=True)               # (B,H,T,1)
+    scores = jnp.einsum("bhtk,bhsk->bhts", q, k,
+                        preferred_element_type=jnp.float32) * (dh ** -0.5)
+    a = scores * jnp.exp(dmat - m)
+    denom = jnp.maximum(jnp.abs(a.sum(-1, keepdims=True)),
+                        jnp.exp(-m))                   # paper's max(|n|,1) scaled
+    aw = (a / denom).astype(v.dtype)
+    hid = jnp.einsum("bhts,bhsk->bhtk", aw, v,
+                     preferred_element_type=jnp.float32)  # (B,H,S,Dh)
+    hid = rmsnorm({"scale": params["norm"].reshape(-1)},
+                  hid.reshape(b, h, s, dh).transpose(0, 2, 1, 3)
+                  .reshape(b, s, h * dh)).reshape(b, s, h, dh)
+    return jnp.einsum("bshk,hkd->bsd", hid.astype(x.dtype), params["wo"])
+
+
+def mlstm_init_cache(params, batch: int):
+    h = params["wi"].shape[1]
+    dh = params["wq"].shape[2]
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),  # matrix memory
+        "n": jnp.zeros((batch, h, dh), jnp.float32),      # normalizer
+        # -1e30 = "empty": exp(m_prev - m_new) underflows to 0 so the
+        # empty state contributes nothing (matches the parallel form).
+        "m": jnp.full((batch, h), -1e30, jnp.float32),    # stabilizer
+    }
+
+
+def mlstm_chunked(params, x, *, chunk: int = 1024, carry=None):
+    """Chunked mLSTM: quadratic only within L-token chunks, the (K,V)
+    matrix memory carried across chunks — flash-linear-attention
+    dataflow, O(S·L) instead of O(S²) HBM traffic, and the enabler for
+    long-context xLSTM training.
+
+    Returns (out (B,S,D), carry {C,n,m}) — carry == the decode cache.
+    """
+    b, s, d = x.shape
+    h = params["wi"].shape[1]
+    dh = d // h
+    l = min(chunk, s)
+    assert s % l == 0, (s, l)
+    nc = s // l
+    q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bhsk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", x, params["wv"])
+    i, logf = _mlstm_gates(params, x)                  # (B,S,H) f32
+    if carry is None:
+        carry = mlstm_init_cache(params, b)
+
+    def split(t):                                      # (B,H,S,K)->(nc,B,H,L,K)
+        return jnp.moveaxis(t.reshape(b, h, nc, l, -1), 2, 0)
+
+    qc, kc, vc = split(q), split(k), split(v)
+    ic = jnp.moveaxis(i.reshape(b, nc, l, h), 1, 0)    # (nc,B,L,H)
+    fc = jnp.moveaxis(logf.reshape(b, nc, l, h), 1, 0)
+    scale = dh ** -0.5
+    tri = jnp.tril(jnp.ones((l, l), bool))
+
+    def body(state, inp):
+        qb, kb, vb, ib, fb = inp                       # (B,H,L,K)/(B,L,H)
+        cS, nS, mS = state["C"], state["n"], state["m"]
+        ib = jnp.moveaxis(ib, -1, 1)                   # (B,H,L)
+        fb = jnp.moveaxis(fb, -1, 1)
+        cum = jnp.cumsum(fb, axis=-1)                  # (B,H,L)
+        # intra-chunk log weights D[t,s] = i_s + cum_t - cum_s
+        dmat = ib[:, :, None, :] + cum[:, :, :, None] - cum[:, :, None, :]
+        dmat = jnp.where(tri[None, None], dmat, NEG_INF)
+        # inter log weight of the carried state at step t
+        w = cum + mS[..., None]                        # (B,H,L)
+        m_t = jnp.maximum(dmat.max(-1), w)             # (B,H,L)
+        intra = jnp.exp(dmat - m_t[..., None])
+        scores = jnp.einsum("bhtk,bhsk->bhts", qb, kb,
+                            preferred_element_type=jnp.float32) * scale
+        a = scores * intra
+        wexp = jnp.exp(w - m_t)                        # (B,H,L)
+        num = jnp.einsum("bhts,bhsv->bhtv", a.astype(vb.dtype), vb,
+                         preferred_element_type=jnp.float32) \
+            + wexp[..., None] * jnp.einsum(
+                "bhtk,bhkv->bhtv", qb.astype(jnp.float32) * scale, cS)
+        den = a.sum(-1) + wexp * jnp.einsum(
+            "bhtk,bhk->bht", qb.astype(jnp.float32) * scale, nS)
+        hid = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # ---- carry update (telescoped decode recursion) ----
+        tot = cum[..., -1]                             # (B,H)
+        wk = ib + tot[..., None] - cum                 # (B,H,L) per-key log w
+        m_new = jnp.maximum(mS + tot, wk.max(-1))
+        kw = jnp.exp(wk - m_new[..., None])            # (B,H,L)
+        c_new = jnp.exp(mS + tot - m_new)[..., None, None] * cS + \
+            jnp.einsum("bhs,bhsk,bhsv->bhkv", kw,
+                       kc_f32(kb), kc_f32(vb))
+        n_new = jnp.exp(mS + tot - m_new)[..., None] * nS + \
+            jnp.einsum("bhs,bhsk->bhk", kw, kc_f32(kb))
+        return {"C": c_new, "n": n_new, "m": m_new}, hid
+
+    def kc_f32(t):
+        return t.astype(jnp.float32)
+
+    carry, hids = jax.lax.scan(body, carry, (qc, kc, vc, ic, fc))
+    hid = jnp.moveaxis(hids, 0, 2).reshape(b, h, s, dh)  # (B,H,S,Dh)
+    hid = rmsnorm({"scale": params["norm"].reshape(-1)},
+                  hid.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+                  ).reshape(b, s, h, dh)
+    out = jnp.einsum("bshk,hkd->bsd", hid.astype(x.dtype), params["wo"])
+    return out, carry
+
+
+def mlstm_decode(params, x, cache):
+    """O(1) recurrent step. x:(B,1,D)."""
+    b, _, d = x.shape
+    h = params["wi"].shape[1]
+    dh = d // h
+    q = jnp.einsum("bd,dhk->bhk", x[:, 0], params["wq"]).astype(jnp.float32)
+    k = jnp.einsum("bd,dhk->bhk", x[:, 0], params["wk"]).astype(jnp.float32)
+    v = jnp.einsum("bd,dhk->bhk", x[:, 0], params["wv"]).astype(jnp.float32)
+    i, logf = _mlstm_gates(params, x[:, :1])
+    i, logf = i[:, 0], logf[:, 0]                      # (B,H)
+    m_new = jnp.maximum(logf + cache["m"], i)
+    decay = jnp.exp(logf + cache["m"] - m_new)[..., None]
+    inp = jnp.exp(i - m_new)[..., None]
+    c = cache["C"] * decay[..., None] + inp[..., None] * k[..., :, None] * v[..., None, :]
+    n = cache["n"] * decay + inp * k
+    num = jnp.einsum("bhk,bhkv->bhv", q * (dh ** -0.5), c)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q * (dh ** -0.5), n)),
+                      jnp.exp(-m_new))
+    hid = num / den[..., None]
+    hid = rmsnorm({"scale": params["norm"].reshape(-1)},
+                  hid.reshape(b, h * dh)).reshape(b, h, dh)
+    out = jnp.einsum("bhk,hkd->bd", hid.astype(x.dtype), params["wo"])
+    return out[:, None], {"C": c, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_spec(d_model: int, n_heads: int) -> Dict[str, ParamSpec]:
+    dh = d_model // n_heads
+    return {
+        # input weights for gates z, i, f, o
+        "wx": ParamSpec((d_model, 4, n_heads, dh), ("embed", None, "heads", None)),
+        # block-diagonal recurrent weights per head
+        "rh": ParamSpec((4, n_heads, dh, dh), (None, "heads", None, None),
+                        scale=0.02),
+        "b": ParamSpec((4, n_heads, dh), (None, "heads", None), init="zeros"),
+        "norm": ParamSpec((n_heads, dh), ("heads", None), init="ones"),
+        "wo": ParamSpec((n_heads, dh, d_model), ("heads", None, "embed")),
+    }
+
+
+def slstm_init_cache(params, batch: int):
+    _, h, dh, _ = params["rh"].shape
+    z = jnp.zeros((batch, h, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.zeros((batch, h, dh), jnp.float32)}
+
+
+def _slstm_cell(params, state, xg):
+    """xg: (B,4,H,Dh) pre-computed input contribution."""
+    c, n, hprev, m = state["c"], state["n"], state["h"], state["m"]
+    rec = jnp.einsum("bhd,ghde->bghe", hprev, params["rh"].astype(jnp.float32))
+    g = xg.astype(jnp.float32) + rec + params["b"].astype(jnp.float32)[None]
+    zt = jnp.tanh(g[:, 0])
+    it = g[:, 1]                                        # exp gate (log space)
+    ft = jax.nn.log_sigmoid(g[:, 2])                    # forget in log space
+    ot = jax.nn.sigmoid(g[:, 3])
+    m_new = jnp.maximum(ft + m, it)
+    i_ = jnp.exp(it - m_new)
+    f_ = jnp.exp(ft + m - m_new)
+    c_new = f_ * c + i_ * zt
+    n_new = f_ * n + i_
+    h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_layer(params, x):
+    """Recurrent sLSTM over a sequence via lax.scan. x:(B,S,D)."""
+    b, s, d = x.shape
+    _, h, dh, _ = params["rh"].shape
+    xg = jnp.einsum("bsd,dghe->bsghe", x, params["wx"])  # (B,S,4,H,Dh)
+    state = slstm_init_cache(params, b)
+
+    def body(st, xg_t):
+        st = _slstm_cell(params, st, xg_t)
+        return st, st["h"]
+
+    state, hs = jax.lax.scan(body, state, jnp.moveaxis(xg, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1)                         # (B,S,H,Dh)
+    hs = rmsnorm({"scale": params["norm"].reshape(-1)},
+                 hs.reshape(b, s, h * dh)).reshape(b, s, h, dh)
+    return jnp.einsum("bshk,hkd->bsd", hs.astype(x.dtype), params["wo"])
+
+
+def slstm_decode(params, x, cache):
+    b = x.shape[0]
+    xg = jnp.einsum("bd,dghe->bghe", x[:, 0], params["wx"])
+    st = _slstm_cell(params, cache, xg)
+    h = params["rh"].shape[1]
+    dh = params["rh"].shape[2]
+    hs = rmsnorm({"scale": params["norm"].reshape(-1)},
+                 st["h"].reshape(b, h * dh)).reshape(b, h, dh)
+    out = jnp.einsum("bhk,hkd->bd", hs.astype(x.dtype), params["wo"])
+    return out[:, None], st

@@ -1,0 +1,69 @@
+"""Gradient compression for cross-pod reduction (top-k + int8, with
+error feedback).
+
+At 1000+ nodes the pod-to-pod (DCN/ICI-over-optics) all-reduce is the
+scarce resource.  The classic fix: reduce full-precision *within* a pod,
+then compress the cross-pod leg.  We implement
+
+  * top-k sparsification (per-tensor, magnitude),
+  * int8 quantization of the surviving values (per-tensor scale),
+  * error feedback (the residual is added back next step) so the
+    compression bias does not accumulate — Karimireddy et al. 2019.
+
+Both ops are pure jnp and differentiably irrelevant (applied to grads).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Compressed(NamedTuple):
+    values_i8: Any     # int8 quantized surviving values
+    indices: Any       # int32 flat indices
+    scale: Any         # fp32 per-tensor scale
+    shape: Any         # static
+
+
+def compress_topk_int8(g, k_fraction: float = 0.05) -> Tuple[Compressed, Any]:
+    """Compress one tensor; returns (compressed, residual_error)."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    k = max(1, int(n * k_fraction))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    kept = flat[idx]
+    scale = jnp.maximum(jnp.abs(kept).max(), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(kept / scale), -127, 127).astype(jnp.int8)
+    # residual: what the wire did NOT carry (top-k misses + quant error)
+    recon = jnp.zeros_like(flat).at[idx].set(q.astype(jnp.float32) * scale)
+    err = (flat - recon).reshape(g.shape)
+    return Compressed(values_i8=q, indices=idx, scale=scale,
+                      shape=g.shape), err
+
+
+def decompress_topk_int8(c: Compressed):
+    n = 1
+    for d in c.shape:
+        n *= d
+    flat = jnp.zeros((n,), jnp.float32).at[c.indices].set(
+        c.values_i8.astype(jnp.float32) * c.scale)
+    return flat.reshape(c.shape)
+
+
+def error_feedback_update(g, err_state, k_fraction: float = 0.05):
+    """One error-feedback round for a single tensor.
+
+    Returns (decompressed_gradient, new_error_state).  The caller
+    all-reduces the *compressed* representation across pods; here (single
+    process) compress->decompress models the wire losslessly.
+    """
+    comp, err = compress_topk_int8(g + err_state, k_fraction)
+    return decompress_topk_int8(comp), err
+
+
+def compressed_bytes(c: Compressed) -> int:
+    """Wire size of one compressed tensor (int8 vals + int32 idx + scale)."""
+    k = c.values_i8.shape[0]
+    return k * 1 + k * 4 + 4

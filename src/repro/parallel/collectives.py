@@ -1,0 +1,108 @@
+"""Hand-scheduled collectives (shard_map) for the cases where GSPMD's
+automatic choice is not what a 1000-node deployment wants.
+
+* ``compressed_psum``      — hierarchical gradient reduction: full-
+  precision reduce inside a pod, top-k+int8 (error feedback) on the
+  cross-pod leg.  Wire bytes drop ~25x on the scarce pod-to-pod links.
+* ``flash_decode_shardmap``— sequence-parallel decode attention: each
+  device holds a KV-cache shard, computes partial (max, sum, acc) and
+  combines with two tiny psums — FlashDecoding's tree-reduction mapped
+  onto the TPU mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical compressed all-reduce
+# ---------------------------------------------------------------------------
+
+
+def _topk_int8_wire(x, k_fraction: float):
+    """(values_int8, indices, scale) — what actually crosses the pod link."""
+    flat = x.reshape(-1)
+    k = max(1, int(flat.shape[0] * k_fraction))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    kept = flat[idx]
+    scale = jnp.maximum(jnp.abs(kept).max(), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(kept / scale), -127, 127).astype(jnp.int8)
+    return q, idx, scale
+
+
+def compressed_psum(mesh: Mesh, *, pod_axis: str = "pod",
+                    inner_axes: Tuple[str, ...] = ("data",),
+                    k_fraction: float = 0.05):
+    """Build fn(grad (replicated-shape per inner shard), err) -> (g, err).
+
+    Protocol per tensor:
+      1. psum over the intra-pod axes (full precision, fast ICI);
+      2. add error-feedback residual; top-k+int8 encode;
+      3. psum the DENSE reconstruction over the pod axis — on a real
+         wire the (int8 values, indices) pairs are exchanged; the dense
+         psum here is the semantics-equivalent single-process stand-in,
+         while wire bytes are accounted analytically (see
+         optim.compression.compressed_bytes);
+      4. new residual = input - reconstruction (stays local).
+    """
+
+    def reduce_one(g, err):
+        g = jax.lax.psum(g, inner_axes)
+        g_in = g + err
+        q, idx, scale = _topk_int8_wire(g_in, k_fraction)
+        recon = jnp.zeros_like(g_in.reshape(-1)).at[idx].set(
+            q.astype(g_in.dtype) * scale).reshape(g_in.shape)
+        g_out = jax.lax.psum(recon, pod_axis) / 1.0
+        new_err = g_in - recon
+        return g_out, new_err
+
+    def fn(grads, errs):
+        pairs = jax.tree_util.tree_map(reduce_one, grads, errs)
+        new_g = jax.tree_util.tree_map(
+            lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        new_e = jax.tree_util.tree_map(
+            lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        return new_g, new_e
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Sequence-parallel flash decode
+# ---------------------------------------------------------------------------
+
+
+def flash_decode_shardmap(mesh: Mesh, seq_axis: str = "model"):
+    """fn(q (B,H,D), k (B,T,H,D), v (B,T,H,D)) with T sharded on seq_axis.
+
+    Each shard computes its local (m, l, acc); two psum_scatter-free
+    psums of (B,H) scalars + (B,H,D) combine the partial softmaxes:
+    out = sum_i exp(m_i - m) * acc_i / sum_i exp(m_i - m) * l_i.
+    """
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(None, None, None), P(None, seq_axis, None, None),
+                  P(None, seq_axis, None, None)),
+        out_specs=P(None, None, None), check_rep=False)
+    def fn(q, k, v):
+        scale = q.shape[-1] ** -0.5
+        s = jnp.einsum("bhd,bthd->bht", q.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        m_loc = s.max(axis=-1)                          # (B,H)
+        p = jnp.exp(s - m_loc[..., None])
+        l_loc = p.sum(axis=-1)
+        acc = jnp.einsum("bht,bthd->bhd", p, v.astype(jnp.float32))
+        m = jax.lax.pmax(m_loc, seq_axis)               # global max
+        corr = jnp.exp(m_loc - m)
+        l = jax.lax.psum(l_loc * corr, seq_axis)
+        acc = jax.lax.psum(acc * corr[..., None], seq_axis)
+        return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+    return fn

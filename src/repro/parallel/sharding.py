@@ -1,0 +1,145 @@
+"""Logical-axis sharding: rules mapping logical names -> mesh axes.
+
+Parameters and activations are annotated with *logical* axis names
+("embed", "mlp", "heads", "vocab", "experts", "batch", "seq", ...).
+A :class:`AxisRules` table maps those to physical mesh axes.  The same
+model code therefore runs on the single-pod (16,16) mesh, the two-pod
+(2,16,16) mesh, a CPU smoke test (no mesh at all), or any future shape —
+only the rules change.  This is MaxText-style GSPMD sharding.
+
+Default rules implement FSDP("data") x TP("model") with EP on "model"
+and the batch spread over ("pod","data") when a pod axis exists.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """logical axis name -> mesh axis (or tuple of mesh axes, or None)."""
+
+    table: Tuple[Tuple[str, MeshAxes], ...]
+
+    def get(self, logical: Optional[str]) -> MeshAxes:
+        if logical is None:
+            return None
+        for k, v in self.table:
+            if k == logical:
+                return v
+        return None
+
+    def spec(self, axes: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None,
+             mesh: Optional[Mesh] = None) -> P:
+        """PartitionSpec for logical `axes`.
+
+        With `shape` and `mesh` given, any mapping whose mesh-axis product
+        does not evenly divide the dimension falls back to replication
+        (dropping mesh axes from the left, e.g. ("pod","data")->("data",))
+        — tiny dims (4 heads, batch 1) must not break lowering.
+        """
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh else {}
+        phys, used = [], set()
+        for i, a in enumerate(axes):
+            m = self.get(a)
+            if m is None:
+                phys.append(None)
+                continue
+            ms = (m,) if isinstance(m, str) else tuple(m)
+            ms = tuple(x for x in ms if x not in used)
+            if shape is not None and sizes:
+                dim = shape[i]
+                while ms:
+                    prod = 1
+                    for x in ms:
+                        prod *= sizes[x]
+                    if prod and dim % prod == 0:
+                        break
+                    ms = ms[1:]
+            used.update(ms)
+            phys.append(ms if len(ms) > 1 else (ms[0] if ms else None))
+        return P(*phys)
+
+
+def default_rules(multi_pod: bool = False, *, seq_shard_decode: bool = True,
+                  act_shard: str = "seq") -> AxisRules:
+    """FSDP(data) x TP(model); pod axis extends the data/batch dimension.
+
+    act_shard="seq": Megatron-SP — the residual stream is sharded along
+    sequence over the tensor axis (all-gather before attention/FFN,
+    reduce-scatter after).  act_shard="batch2d": the batch axis spreads
+    over BOTH mesh axes instead (needs global_batch % 256 == 0).
+    Both cut the remat-carry memory by |model|; they differ in which
+    collectives the backward pass pays.
+    """
+    if act_shard == "batch2d":
+        batch = ("pod", "data", "model") if multi_pod \
+            else ("data", "model")
+        seq = None
+    else:
+        batch = ("pod", "data") if multi_pod else ("data",)
+        seq = "model"
+    table = [
+        ("batch", batch),
+        ("seq", seq),
+        ("embed", "data"),          # FSDP: weight d_model axis over data
+        ("mlp", "model"),
+        ("heads", "model"),
+        # kv heads: when batch occupies "data" (or kv doesn't divide) the
+        # per-tensor fallback replicates, as before; for batch=1 decode
+        # (long_500k) the idle data axis shards the kv heads instead.
+        ("kv", "data"),
+        ("vocab", "model"),
+        ("experts", "model"),
+        ("layers", None),
+        ("kv_seq", "model" if seq_shard_decode else None),  # decode cache seq
+        ("act_embed", None),        # activations' d_model axis
+    ]
+    return AxisRules(table=tuple(table))
+
+
+# --------------------------------------------------------------------------
+# Thread-local active (mesh, rules) context used by `constrain`.
+# --------------------------------------------------------------------------
+
+_ctx = threading.local()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[AxisRules]):
+    prev = getattr(_ctx, "state", None)
+    _ctx.state = (mesh, rules) if mesh is not None else None
+    try:
+        yield
+    finally:
+        _ctx.state = prev
+
+
+def active() -> Optional[Tuple[Mesh, AxisRules]]:
+    return getattr(_ctx, "state", None)
+
+
+def constrain(x, *logical: Optional[str]):
+    """with_sharding_constraint by logical names; no-op without a mesh."""
+    st = active()
+    if st is None:
+        return x
+    mesh, rules = st
+    spec = rules.spec(logical, shape=x.shape, mesh=mesh)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))
+
+
+def sharding_for(axes: Sequence[Optional[str]], mesh: Mesh,
+                 rules: AxisRules,
+                 shape: Optional[Sequence[int]] = None) -> NamedSharding:
+    return NamedSharding(mesh, rules.spec(axes, shape=shape, mesh=mesh))

@@ -1,0 +1,219 @@
+"""Step functions (train / prefill / serve) shared by the trainer, the
+serving engine and the multi-pod dry-run.
+
+Everything is expressed over spec trees so the dry-run can lower the
+exact production step with ShapeDtypeStruct inputs and NamedShardings,
+and the CPU trainer can run the same function on real arrays.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, InputShape
+from ..models import api
+from ..models.common import ParamSpec, abstract_params, init_params, spec_map
+from ..optim import (adamw_init, adamw_init_spec, adamw_update,
+                     error_feedback_update, linear_warmup_cosine)
+from .sharding import AxisRules, constrain, sharding_for, use_mesh
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    ef_err: Any = None      # error-feedback residuals (compression on)
+
+
+def train_state_spec(cfg: ArchConfig,
+                     compress: bool = False) -> TrainState:
+    pspec = api.param_spec(cfg)
+    # params live in the compute dtype; masters/moments in fp32
+    pspec_dt = spec_map(
+        lambda s: ParamSpec(s.shape, s.axes, cfg.jdtype, init=s.init,
+                            scale=s.scale), pspec)
+    ef = spec_map(lambda s: ParamSpec(s.shape, s.axes, jnp.float32,
+                                      init="zeros"), pspec) if compress \
+        else None
+    return TrainState(params=pspec_dt, opt=adamw_init_spec(pspec),
+                      ef_err=ef)
+
+
+def init_train_state(cfg: ArchConfig, key,
+                     compress: bool = False) -> TrainState:
+    spec = api.param_spec(cfg)
+    params32 = init_params(spec, key)
+    params = jax.tree_util.tree_map(lambda x: x.astype(cfg.jdtype), params32)
+    ef = jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), params32) if compress \
+        else None
+    return TrainState(params=params, opt=adamw_init(params32), ef_err=ef)
+
+
+def make_train_step(cfg: ArchConfig, *, base_lr: float = 3e-4,
+                    warmup: int = 100, total_steps: int = 10_000,
+                    accum: int = 1, compress_fraction: Optional[float] = None
+                    ) -> Callable:
+    """(TrainState, batch) -> (TrainState, metrics).
+
+    ``accum`` > 1 expects batch leaves with a leading microbatch axis and
+    scans over them (sequential accumulation = overlap-friendly under
+    GSPMD: each microbatch's reduce-scatter overlaps the next one's
+    compute).  ``compress_fraction`` enables error-feedback top-k+int8
+    gradient compression (cross-pod wire model; see optim.compression).
+    """
+    loss_fn = api.loss_fn(cfg)
+    axes_tree = jax.tree_util.tree_map(
+        lambda s: s.axes, api.param_spec(cfg),
+        is_leaf=lambda x: hasattr(x, "axes"))
+
+    def shard_like_params(grads):
+        """Pin gradient shardings to the parameter layout.
+
+        Without this GSPMD is free to keep per-layer weight grads as
+        replicated partial sums and all-reduce them at FULL size inside
+        the backward loop (memory x16, collective x16); constraining to
+        the param sharding turns that into reduce-scatter-style grads.
+        """
+        return jax.tree_util.tree_map(
+            lambda g, ax: constrain(g, *ax), grads, axes_tree)
+
+    def grads_of(params, batch):
+        loss, g = jax.value_and_grad(lambda p: loss_fn(p, batch))(params)
+        return loss, shard_like_params(g)
+
+    def step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        params = state.params
+        if accum > 1:
+            def acc_body(carry, mb):
+                gsum, lsum = carry
+                l, g = grads_of(params, mb)
+                gsum = jax.tree_util.tree_map(jnp.add, gsum, g)
+                return (gsum, lsum + l), None
+            zeros = shard_like_params(jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (grads, loss), _ = jax.lax.scan(acc_body, (zeros, 0.0), batch)
+            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+            loss = loss / accum
+        else:
+            loss, grads = grads_of(params, batch)
+
+        new_ef = state.ef_err
+        if compress_fraction is not None and state.ef_err is not None:
+            # error-feedback top-k+int8 on the cross-pod wire (the wire
+            # itself is modeled losslessly in-process; see
+            # parallel.collectives.compressed_psum for the shard_map leg)
+            pairs = jax.tree_util.tree_map(
+                lambda g, e: error_feedback_update(
+                    g.astype(jnp.float32), e, compress_fraction),
+                grads, state.ef_err)
+            grads = jax.tree_util.tree_map(
+                lambda p: p[0], pairs,
+                is_leaf=lambda x: isinstance(x, tuple))
+            new_ef = jax.tree_util.tree_map(
+                lambda p: p[1], pairs,
+                is_leaf=lambda x: isinstance(x, tuple))
+
+        lr = linear_warmup_cosine(state.opt.step, base_lr, warmup,
+                                  total_steps)
+        new_params, new_opt = adamw_update(grads, state.opt, lr,
+                                           param_dtype=cfg.jdtype)
+        metrics = {"loss": loss, "lr": lr, "step": new_opt.step}
+        return TrainState(params=new_params, opt=new_opt,
+                          ef_err=new_ef), metrics
+
+    return step
+
+
+def make_eval_step(cfg: ArchConfig) -> Callable:
+    loss_fn = api.loss_fn(cfg)
+
+    def step(params, batch):
+        return loss_fn(params, batch)
+    return step
+
+
+def make_prefill_step(cfg: ArchConfig, cache_len: int) -> Callable:
+    fn = api.prefill_fn(cfg, cache_len)
+
+    def step(params, batch):
+        return fn(params, batch)
+    return step
+
+
+def make_serve_step(cfg: ArchConfig) -> Callable:
+    """One decode tick: greedy-sample next token and advance the cache."""
+    fn = api.decode_fn(cfg)
+
+    def step(params, batch, cache):
+        logits, new_cache = fn(params, batch["token"], cache,
+                               batch["kv_len"])
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return {"token": next_tok, "kv_len": batch["kv_len"] + 1}, new_cache
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Sharding helpers for step I/O
+# ---------------------------------------------------------------------------
+
+
+def batch_axes(cfg: ArchConfig, shape: InputShape):
+    """Logical axes tree for one batch (matches api.input_spec)."""
+    return {k: v.axes for k, v in api.input_spec(cfg, shape).items()}
+
+
+def abstract_batch(cfg: ArchConfig, shape: InputShape, mesh=None,
+                   rules: Optional[AxisRules] = None, accum: int = 1):
+    spec = api.input_spec(cfg, shape)
+    shard = None
+    if mesh is not None and rules is not None:
+        shard = lambda axes, shape: sharding_for(axes, mesh, rules, shape)
+    if accum > 1:
+        # split the global batch into `accum` microbatches (dim 0 = batch)
+        spec = {k: ParamSpec((accum, v.shape[0] // accum) + v.shape[1:],
+                             (None,) + v.axes, v.dtype)
+                for k, v in spec.items()}
+    return abstract_params(spec, shard)
+
+
+def abstract_state(cfg: ArchConfig, mesh=None,
+                   rules: Optional[AxisRules] = None):
+    spec = train_state_spec(cfg)
+    shard = None
+    if mesh is not None and rules is not None:
+        shard = lambda axes, shape: sharding_for(axes, mesh, rules, shape)
+    return abstract_params(spec, shard)
+
+
+def abstract_cache(cfg: ArchConfig, shape: InputShape, mesh=None,
+                   rules: Optional[AxisRules] = None):
+    spec = api.cache_spec(cfg, shape)
+    shard = None
+    if mesh is not None and rules is not None:
+        shard = lambda axes, shape: sharding_for(axes, mesh, rules, shape)
+    return abstract_params(spec, shard)
+
+
+def materialize_batch(cfg: ArchConfig, shape: InputShape, seed: int = 0,
+                      accum: int = 1):
+    """Synthetic concrete batch matching input_spec (for CPU runs)."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, s in api.input_spec(cfg, shape).items():
+        shp = ((accum, s.shape[0] // accum) + s.shape[1:]) if accum > 1 \
+            else s.shape
+        if s.dtype == jnp.int32:
+            hi = cfg.vocab if "token" in k or "label" in k else 2
+            out[k] = jnp.asarray(
+                rng.integers(0, hi, size=shp, dtype=np.int64), jnp.int32)
+        else:
+            out[k] = jnp.asarray(rng.normal(size=shp), s.dtype)
+    if "kv_len" in out:
+        out["kv_len"] = jnp.full(out["kv_len"].shape, shape.seq_len - 1,
+                                 jnp.int32)
+    return out

@@ -1,0 +1,152 @@
+"""Slot-based continuous-batching serving engine.
+
+vLLM-style scheduling adapted to JAX's static shapes:
+
+* a fixed pool of `n_slots` sequence slots shares one decode KV cache
+  (slot = batch row; cache rows are reused after a sequence finishes);
+* arriving requests are prefilled one at a time (prefill_fn), and their
+  KV is spliced into the slot row; decode ticks run the whole pool every
+  step (serve_step), so new sequences join mid-flight — continuous
+  batching without recompilation;
+* finished sequences (EOS or max_new_tokens) free their slot.
+
+The same engine drives the dry-run decode cells (serve_step) and the CPU
+example (examples/serve_batch.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig, InputShape
+from ..models import api
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (prompt_len,) int32
+    max_new_tokens: int = 32
+    eos_id: int = -1                # -1: never stops early
+    # filled by the engine:
+    output: List[int] = dataclasses.field(default_factory=list)
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    n_slots: int = 8
+    cache_len: int = 512
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, params, serve_cfg: ServeConfig):
+        if cfg.family == "encdec":
+            raise NotImplementedError(
+                "engine drives decoder-only LMs; whisper uses launch/serve")
+        self.cfg = cfg
+        self.params = params
+        self.sc = serve_cfg
+        shape = InputShape("engine", serve_cfg.cache_len,
+                           serve_cfg.n_slots, "decode")
+        from ..models.common import init_params
+        self.cache = init_params(api.cache_spec(cfg, shape),
+                                 jax.random.PRNGKey(0))
+        self.kv_len = jnp.zeros((serve_cfg.n_slots,), jnp.int32)
+        self.tokens = jnp.zeros((serve_cfg.n_slots, 1), jnp.int32)
+        self.active: List[Optional[Request]] = [None] * serve_cfg.n_slots
+        self.queue: deque = deque()
+        self._decode = jax.jit(api.decode_fn(cfg))
+        self._prefill = {}
+        self.steps = 0
+        self.finished: List[Request] = []
+
+    # -- admission ---------------------------------------------------------
+
+    def submit(self, req: Request):
+        req.t_submit = time.time()
+        self.queue.append(req)
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.active) if r is None]
+
+    def _prefill_fn(self, plen: int):
+        if plen not in self._prefill:
+            self._prefill[plen] = jax.jit(
+                api.prefill_fn(self.cfg, self.sc.cache_len))
+        return self._prefill[plen]
+
+    def _splice(self, slot: int, req: Request):
+        """Prefill one request and write its KV/state into `slot`."""
+        plen = int(req.prompt.shape[0])
+        batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
+        logits, cache1 = self._prefill_fn(plen)(self.params, batch)
+        # copy row 0 of the single-seq cache into slot row of pool cache
+        def put(pool, one):
+            # batch axis = the dim where the pool (n_slots) differs from
+            # the single-sequence cache (1); handles any stacking depth.
+            diffs = [i for i, (p, o) in enumerate(zip(pool.shape, one.shape))
+                     if p != o]
+            if diffs:
+                b_axis = diffs[0]
+            else:
+                cands = [i for i, p in enumerate(pool.shape)
+                         if p == self.sc.n_slots]
+                b_axis = cands[0] if cands else 0
+            idx = [slice(None)] * pool.ndim
+            idx[b_axis] = slot
+            src = jnp.take(one, 0, axis=b_axis)
+            return pool.at[tuple(idx)].set(src.astype(pool.dtype))
+        self.cache = jax.tree_util.tree_map(put, self.cache, cache1)
+        next_tok = int(jnp.argmax(logits[0]))
+        req.output.append(next_tok)
+        req.t_first = time.time()
+        self.active[slot] = req
+        self.kv_len = self.kv_len.at[slot].set(plen)
+        self.tokens = self.tokens.at[slot, 0].set(next_tok)
+
+    # -- main loop ---------------------------------------------------------
+
+    def step(self) -> int:
+        """Admit + one decode tick for the whole pool. Returns #active."""
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            self._splice(slot, self.queue.popleft())
+        if not any(r is not None for r in self.active):
+            return 0
+        logits, self.cache = self._decode(self.params, self.tokens,
+                                          self.cache, self.kv_len)
+        self.kv_len = self.kv_len + jnp.asarray(
+            [1 if r is not None else 0 for r in self.active], jnp.int32)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self.steps += 1
+        for i, r in enumerate(self.active):
+            if r is None:
+                continue
+            tok = int(nxt[i])
+            r.output.append(tok)
+            done = (len(r.output) >= r.max_new_tokens
+                    or tok == r.eos_id
+                    or int(self.kv_len[i]) >= self.sc.cache_len - 1)
+            if done:
+                r.t_done = time.time()
+                self.finished.append(r)
+                self.active[i] = None
+            else:
+                self.tokens = self.tokens.at[i, 0].set(tok)
+        return sum(r is not None for r in self.active)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
+        while (self.queue or any(r is not None for r in self.active)) \
+                and self.steps < max_steps:
+            self.step()
+        return self.finished

@@ -1,0 +1,96 @@
+"""HLO analyzer + roofline unit tests on synthetic HLO text."""
+import pytest
+
+from repro.analysis.hlo import (_shape_bytes, analyze_hlo_text,
+                                parse_computations)
+from repro.analysis.roofline import (HW, RooflineTerms,
+                                     roofline_from_report)
+
+HLO = """
+HloModule test
+
+%fused_add (p0: f32[128,256], p1: f32[128,256]) -> f32[128,256] {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %p1 = f32[128,256]{1,0} parameter(1)
+  ROOT %add.1 = f32[128,256]{1,0} add(%p0, %p1)
+}
+
+%body (arg: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %arg = (s32[], f32[128,256]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %x = f32[128,256]{1,0} get-tuple-element(%arg), index=1
+  %w = f32[256,256]{1,0} constant({...})
+  %dot.5 = f32[128,256]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[128,256]{1,0} all-reduce(%dot.5), replica_groups={}, to_apply=%fused_add
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[128,256]) tuple(%ip, %ar)
+}
+
+%cond (arg: (s32[], f32[128,256])) -> pred[] {
+  %arg = (s32[], f32[128,256]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %n = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (x: f32[128,256]) -> f32[128,256] {
+  %x = f32[128,256]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %t0 = (s32[], f32[128,256]) tuple(%zero, %x)
+  %loop = (s32[], f32[128,256]) while(%t0), condition=%cond, body=%body
+  ROOT %out = f32[128,256]{1,0} get-tuple-element(%loop), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[128,256]{1,0}") == 128 * 256 * 4
+    assert _shape_bytes("bf16[2,3]") == 12
+    assert _shape_bytes("(s32[], f32[4,4])") == 4 + 64
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_parse_and_trip_count():
+    comps, entry = parse_computations(HLO)
+    assert entry == "main"
+    assert set(comps) >= {"main", "body", "cond", "fused_add"}
+
+
+def test_analyzer_multiplies_loop_body():
+    rep = analyze_hlo_text(HLO)
+    # dot: 2*128*256*256 per iteration, 12 iterations
+    assert rep.flops == 12 * 2 * 128 * 256 * 256
+    assert rep.trip_counts == [12]
+    # all-reduce of 128x256 f32: 2x operand bytes x 12
+    assert rep.collective_bytes["all-reduce"] == 12 * 2 * 128 * 256 * 4
+    assert rep.collective_counts["all-reduce"] == 12
+
+
+def test_roofline_terms_and_bound():
+    rep = analyze_hlo_text(HLO)
+    t = roofline_from_report(rep, chips=256, model_flops=1e15)
+    assert t.t_compute == pytest.approx(rep.flops / HW.peak_flops_bf16)
+    assert t.t_collective == pytest.approx(
+        rep.total_collective_bytes / (HW.ici_bw_per_link * HW.ici_links))
+    assert t.bound in ("compute", "memory", "collective")
+    assert 0 <= t.roofline_fraction
+    d = t.as_dict()
+    assert d["bound"] == t.bound
+
+
+def test_model_flops_definitions():
+    from repro.analysis.roofline import active_params, model_flops
+    from repro.configs import SHAPES, get_config
+    dense = get_config("deepseek_7b")
+    moe = get_config("deepseek_moe_16b")
+    n_dense = active_params(dense)
+    n_moe_total = active_params(moe)
+    # MoE active << total: top-6 of 64 experts
+    from repro.models import api
+    from repro.models.common import count_params
+    assert n_moe_total < count_params(api.param_spec(moe)) * 0.5
+    mf_train = model_flops(dense, SHAPES["train_4k"])
+    mf_decode = model_flops(dense, SHAPES["decode_32k"])
+    assert mf_train == pytest.approx(6 * n_dense * 256 * 4096)
+    assert mf_decode == pytest.approx(2 * n_dense * 128)

@@ -1,0 +1,160 @@
+"""Per-architecture smoke tests (brief requirement): reduced config, one
+forward/train step on CPU, output shapes + no NaNs; plus decode-vs-
+prefill consistency for every family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import api
+from repro.models.common import count_params, init_params
+from repro.parallel import steps as st
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=32):
+    if cfg.family == "encdec":
+        return {"frames": jnp.ones((b, s, cfg.d_model), jnp.float32),
+                "dec_tokens": jnp.zeros((b, cfg.dec_len), jnp.int32),
+                "labels": jnp.zeros((b, cfg.dec_len), jnp.int32)}
+    if cfg.family == "vlm":
+        p = cfg.n_img_patches
+        return {"tokens": jnp.zeros((b, s - p), jnp.int32),
+                "img_embeds": jnp.ones((b, p, cfg.d_model), jnp.float32),
+                "labels": jnp.zeros((b, s - p), jnp.int32)}
+    return {"tokens": jnp.zeros((b, s), jnp.int32),
+            "labels": jnp.zeros((b, s), jnp.int32)}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()
+    params = init_params(api.param_spec(cfg), KEY)
+    batch = _batch(cfg)
+    loss = api.loss_fn(cfg)(params, batch)
+    assert jnp.isfinite(loss), arch
+
+    state = st.init_train_state(cfg, KEY)
+    step = jax.jit(st.make_train_step(cfg, total_steps=10))
+    state2, metrics = step(state, batch)
+    assert jnp.isfinite(metrics["loss"])
+    for leaf in jax.tree_util.tree_leaves(state2.params):
+        assert np.isfinite(np.asarray(leaf)).all(), arch
+    assert int(metrics["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_spec_matches_brief(arch):
+    cfg = get_config(arch)
+    # exact assigned hyperparameters survive in the FULL config
+    briefs = {
+        "llava_next_mistral_7b": (32, 4096, 32, 8, 14336, 32000),
+        "minicpm3_4b": (62, 2560, 40, 40, 6400, 73448),
+        "glm4_9b": (40, 4096, 32, 2, 13696, 151552),
+        "mistral_large_123b": (88, 12288, 96, 8, 28672, 32768),
+        "deepseek_7b": (30, 4096, 32, 32, 11008, 102400),
+        "deepseek_moe_16b": (28, 2048, 16, 16, None, 102400),
+        "deepseek_v2_236b": (60, 5120, 128, 128, None, 102400),
+        "whisper_medium": (24, 1024, 16, 16, 4096, 51865),
+        "zamba2_7b": (81, 3584, 32, 32, 14336, 32000),
+        "xlstm_125m": (12, 768, 4, 4, 0, 50304),
+    }
+    L, d, h, kv, dff, vocab = briefs[arch]
+    assert cfg.n_layers == L and cfg.d_model == d
+    assert cfg.n_heads == h and cfg.n_kv_heads == kv
+    if dff is not None:
+        assert cfg.d_ff == dff
+    assert cfg.vocab == vocab
+    if arch == "deepseek_moe_16b":
+        assert (cfg.n_experts, cfg.top_k, cfg.n_shared,
+                cfg.d_ff_expert) == (64, 6, 2, 1408)
+    if arch == "deepseek_v2_236b":
+        assert (cfg.n_experts, cfg.top_k, cfg.kv_lora) == (160, 6, 512)
+    if arch == "zamba2_7b":
+        assert cfg.ssm_state == 64
+    if arch == "whisper_medium":
+        assert cfg.n_dec_layers == 24
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_consistent_with_forward(arch):
+    """prefill(s tokens) + decode == forward(s+1 tokens) last logits."""
+    cfg = get_config(arch).reduced()
+    if cfg.family == "encdec":
+        pytest.skip("separate encdec consistency test below")
+    if cfg.family == "moe":
+        # capacity dropping is sequence-global: give ample capacity so the
+        # forward and decode paths see identical expert assignments
+        cfg = cfg.replace(capacity_factor=16.0)
+    params = init_params(api.param_spec(cfg), KEY)
+    b, s = 2, 16
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, s + 1)), jnp.int32)
+    img = None
+    n_img = 0
+    if cfg.family == "vlm":
+        n_img = cfg.n_img_patches
+        img = jnp.asarray(rng.standard_normal(
+            (b, n_img, cfg.d_model)), jnp.float32)
+
+    from repro.models import transformer as tf
+    full_logits = tf.lm_forward(cfg, params, toks, img)
+    want = full_logits[:, -1]
+
+    pre_logits, cache = tf.lm_prefill(cfg, params, toks[:, :s],
+                                      s + n_img + 8, img_embeds=img)
+    kv_len = jnp.full((b,), s + n_img, jnp.int32)
+    got, _ = tf.lm_decode(cfg, params, toks[:, s:s + 1], cache, kv_len)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-3, rtol=2e-3)
+    # prefill's own last-token logits match forward at that position
+    # (image patches shift text positions by n_img)
+    np.testing.assert_allclose(np.asarray(pre_logits),
+                               np.asarray(full_logits[:, n_img + s - 1]),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_encdec_decode_consistency():
+    cfg = get_config("whisper_medium").reduced()
+    params = init_params(api.param_spec(cfg), KEY)
+    b, s_enc = 2, 16
+    rng = np.random.default_rng(1)
+    frames = jnp.asarray(rng.standard_normal((b, s_enc, cfg.d_model)),
+                         jnp.float32)
+    from repro.models import encdec as ed
+    enc = ed.encode(cfg, params, frames)
+    dec_toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, 4)), jnp.int32)
+    full = ed.decode_train(cfg, params, enc, dec_toks)
+
+    cache = ed.encdec_prefill(cfg, params, frames)
+    kv = jnp.zeros((b,), jnp.int32)
+    for t in range(4):
+        got, cache = ed.encdec_decode(cfg, params, dec_toks[:, t:t + 1],
+                                      cache, kv)
+        kv = kv + 1
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(full[:, t]),
+                                   atol=2e-3, rtol=2e-3)
+
+
+def test_param_counts_in_expected_range():
+    """FULL configs: parameter counts match the advertised model sizes."""
+    expect = {
+        "deepseek_7b": (6e9, 8e9),
+        "mistral_large_123b": (115e9, 130e9),
+        "deepseek_moe_16b": (14e9, 20e9),
+        "deepseek_v2_236b": (200e9, 260e9),
+        "glm4_9b": (8e9, 11e9),
+        "minicpm3_4b": (3.4e9, 5e9),
+        "zamba2_7b": (6e9, 9e9),
+        # our backbone uses SwiGLU (3 FFN mats) vs whisper's GELU (2):
+        # ~0.96B vs the official 0.77B — same class, documented in DESIGN
+        "whisper_medium": (0.6e9, 1.1e9),
+        "xlstm_125m": (0.06e9, 0.2e9),
+        "llava_next_mistral_7b": (6.5e9, 8e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = count_params(api.param_spec(get_config(arch)))
+        assert lo <= n <= hi, f"{arch}: {n:,}"

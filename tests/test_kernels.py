@@ -1,0 +1,161 @@
+"""Pallas kernel sweeps: shapes x dtypes, allclose vs the ref.py oracle
+(interpret=True executes kernel bodies in Python on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def rnd(*shape, dtype=jnp.float32):
+    x = RNG.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+TOL = {jnp.float32: dict(atol=2e-5, rtol=2e-5),
+       jnp.bfloat16: dict(atol=3e-2, rtol=3e-2)}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,hkv,s,t,d", [
+    (1, 2, 2, 64, 64, 32),      # MHA, square
+    (2, 4, 2, 128, 128, 32),    # GQA 2x
+    (1, 8, 2, 64, 128, 64),     # GQA 4x, longer KV than Q
+    (2, 2, 1, 256, 256, 16),    # MQA
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(b, h, hkv, s, t, d, dtype, causal):
+    q, k, v = rnd(b, s, h, d, dtype=dtype), rnd(b, t, hkv, d, dtype=dtype), \
+        rnd(b, t, hkv, d, dtype=dtype)
+    if causal and t != s:
+        pytest.skip("causal requires t == s in this contract")
+    out = ops.flash_attention(q, k, v, causal=causal, interpret=True)
+    want = ops.flash_attention(q, k, v, causal=causal, impl="xla")
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,hkv,t,d", [
+    (2, 4, 2, 128, 32), (1, 8, 8, 256, 64), (3, 4, 1, 512, 16),
+])
+def test_flash_decode(b, h, hkv, t, d, dtype):
+    q = rnd(b, 1, h, d, dtype=dtype)
+    k, v = rnd(b, t, hkv, d, dtype=dtype), rnd(b, t, hkv, d, dtype=dtype)
+    kv_len = jnp.asarray(RNG.integers(1, t, b), jnp.int32)
+    out = ops.flash_decode(q, k, v, kv_len, interpret=True)
+    want = ops.flash_decode(q, k, v, kv_len, impl="xla")
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (1, 32, 2, 8, 4, 8), (2, 64, 3, 16, 8, 16), (1, 128, 1, 32, 16, 32),
+    (2, 64, 2, 16, 8, 64),     # chunk == seq (single chunk)
+])
+def test_mamba_scan(b, s, h, p, n, chunk, dtype):
+    xh = rnd(b, s, h, p, dtype=dtype)
+    dt = jnp.abs(rnd(b, s, h)) * 0.1
+    a_log = rnd(h) * 0.5
+    bm, cm = rnd(b, s, n), rnd(b, s, n)
+    y, _ = ops.mamba_scan(xh, dt, a_log, bm, cm, chunk=chunk,
+                          interpret=True)
+    want, _ = ref.ssd_ref(xh, dt, a_log, bm, cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_mamba_chunked_xla_matches_recurrent_oracle():
+    """models.ssm.ssd_chunked (the XLA path) vs the sequential oracle."""
+    from repro.models.ssm import ssd_chunked
+    xh = rnd(2, 64, 3, 16)
+    dt = jnp.abs(rnd(2, 64, 3)) * 0.1
+    a_log = rnd(3) * 0.5
+    bm, cm = rnd(2, 64, 8), rnd(2, 64, 8)
+    y, state = ssd_chunked(xh, dt, a_log, bm, cm, chunk=16)
+    want_y, want_state = ref.ssd_ref(xh, dt, a_log, bm, cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want_y),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(want_state),
+                               atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("e,c,d,f", [
+    (2, 64, 32, 64), (4, 100, 64, 128), (1, 128, 128, 256),
+    (8, 7, 32, 64),            # capacity smaller than block (padding)
+])
+def test_moe_gmm(e, c, d, f, dtype):
+    x, w = rnd(e, c, d, dtype=dtype), rnd(e, d, f, dtype=dtype)
+    out = ops.moe_gmm(x, w, interpret=True)
+    want = ref.gmm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,d", [(8, 64), (100, 256), (256, 128), (1, 32)])
+def test_rmsnorm(n, d, dtype):
+    x, s = rnd(n, d, dtype=dtype), rnd(d)
+    out = ops.fused_rmsnorm(x, s, interpret=True)
+    want = ref.rmsnorm_ref(x, s)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_flash_attention_custom_vjp_matches_oracle_grad():
+    q, k, v = rnd(1, 64, 4, 32), rnd(1, 64, 2, 32), rnd(1, 64, 2, 32)
+
+    def loss_pallas(q, k, v):
+        return (ops.flash_attention(q, k, v, interpret=True) ** 2).sum()
+
+    def loss_ref(q, k, v):
+        return (ops.flash_attention(q, k, v, impl="xla") ** 2).sum()
+
+    g1 = jax.grad(loss_pallas, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_attention_module_paths_agree():
+    """models.attention full vs chunked vs kernel on GQA shapes."""
+    from repro.models.attention import attend_chunked, attend_full
+    q, k, v = rnd(2, 96, 4, 32), rnd(2, 96, 2, 32), rnd(2, 96, 2, 32)
+    a = attend_full(q, k, v)
+    b = attend_chunked(q, k, v, chunk=32)
+    c = ops.flash_attention(q, k, v, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5,
+                               rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=2e-5,
+                               rtol=2e-5)
+
+
+@pytest.mark.parametrize("b,s,h,dh,chunk", [
+    (2, 32, 3, 8, 16), (1, 64, 2, 16, 64), (2, 48, 1, 8, 16),
+])
+def test_slstm_kernel(b, s, h, dh, chunk):
+    xg = rnd(b, s, 4, h, dh)
+    r = rnd(4, h, dh, dh) * 0.1
+    bias = rnd(4, h, dh) * 0.1
+    out = ops.slstm_seq(xg, r, bias, interpret=True)
+    want = ops.slstm_seq(xg, r, bias, impl="xla")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_mlstm_chunked_matches_parallel():
+    from repro.models.xlstm import (mlstm_chunked, mlstm_parallel,
+                                    mlstm_spec)
+    from repro.models.common import init_params
+    p = init_params(mlstm_spec(64, 4), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 64))
+    a = mlstm_parallel(p, x)
+    b, _ = mlstm_chunked(p, x, chunk=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=1e-5, rtol=1e-5)

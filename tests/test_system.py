@@ -1,0 +1,91 @@
+"""Cost-model system behaviour: module/chip/package algebra + RE/NRE."""
+import pytest
+
+from repro.core import (Module, System, amortized_costs, chip_costs,
+                        d2d_module, group_nre, make_chip, re_cost,
+                        soc_system, split_system)
+
+
+def test_module_chip_package_algebra():
+    m = Module("cpu", 100.0, "7nm")
+    chip = make_chip("die", [m], "7nm", integration="MCM")
+    # D2D module attached automatically at the tech's 10% share
+    assert any(mod.is_d2d for mod in chip.modules)
+    assert chip.area_mm2 == pytest.approx(100.0 / 0.9, rel=1e-6)
+    assert chip.module_area_mm2 == pytest.approx(100.0)
+    sys_ = System("s", (chip, chip), "MCM", quantity=1e6)
+    assert sys_.n_chips == 2
+    assert sys_.silicon_area_mm2 == pytest.approx(2 * chip.area_mm2)
+
+
+def test_soc_has_no_d2d():
+    s = soc_system("s", 500.0, "7nm")
+    assert all(not m.is_d2d for c in s.chips for m in c.modules)
+
+
+def test_process_mismatch_rejected():
+    m = Module("x", 10.0, "7nm")
+    with pytest.raises(ValueError):
+        make_chip("bad", [m], "5nm", d2d_overhead=0.0)
+
+
+def test_re_breakdown_positive_and_consistent():
+    s = split_system("m", 600.0, "5nm", 3, "2.5D")
+    br = re_cost(s)
+    d = br.as_dict()
+    for k, v in d.items():
+        assert v >= 0.0, k
+    assert d["total"] == pytest.approx(
+        br.raw_chips + br.chip_defects + br.raw_package
+        + br.package_defects + br.wasted_kgd)
+    assert br.die_cost + br.packaging_cost == pytest.approx(br.total)
+
+
+def test_chip_last_beats_chip_first_for_advanced_packaging():
+    """Paper Sec 3.2: chip-first wastes KGDs through packaging losses."""
+    s = split_system("m", 600.0, "5nm", 3, "2.5D")
+    last = re_cost(s, flow="chip-last").total
+    first = re_cost(s, flow="chip-first").total
+    assert last < first
+
+
+def test_yield_improvement_saves_die_cost():
+    """Splitting a big 5nm die must cut the defect cost (paper Fig 4)."""
+    soc = re_cost(soc_system("s", 800.0, "5nm"))
+    mcm = re_cost(split_system("m", 800.0, "5nm", 3, "MCM"))
+    assert mcm.chip_defects < soc.chip_defects
+    assert mcm.die_cost < soc.die_cost
+
+
+def test_nre_entity_dedup():
+    """Chiplet reuse: same chip design in two systems is designed once."""
+    m = Module("core", 150.0, "7nm")
+    chip = make_chip("shared_die", [m], "7nm", integration="MCM")
+    s1 = System("s1", (chip,), "MCM", quantity=1e5)
+    s2 = System("s2", (chip, chip), "MCM", quantity=1e5)
+    ent = group_nre([s1, s2])
+    assert len(ent.chips) == 1
+    assert len(ent.modules) == 1
+    # separate designs => separate chip NRE
+    chip_b = make_chip("other_die", [Module("core2", 150.0, "7nm")], "7nm",
+                       integration="MCM")
+    ent2 = group_nre([s1, System("s3", (chip_b,), "MCM", quantity=1e5)])
+    assert len(ent2.chips) == 2
+
+
+def test_amortization_scales_with_quantity():
+    lo = amortized_costs([soc_system("s", 400.0, "7nm", quantity=1e4)])["s"]
+    hi = amortized_costs([soc_system("s", 400.0, "7nm", quantity=1e8)])["s"]
+    assert lo.nre_total > hi.nre_total * 100
+    assert lo.re.total == pytest.approx(hi.re.total)
+
+
+def test_package_reuse_shares_nre_but_costs_re():
+    from repro.core import scms_systems
+    plain = amortized_costs(scms_systems(package_reuse=False))
+    reused = amortized_costs(scms_systems(package_reuse=True))
+    # 4x system: package NRE drops under reuse
+    assert reused["scms_4x_MCM"].nre_packages < \
+        plain["scms_4x_MCM"].nre_packages
+    # 1x system: oversized package raises RE
+    assert reused["scms_1x_MCM"].re.total > plain["scms_1x_MCM"].re.total

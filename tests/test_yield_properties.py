@@ -1,0 +1,80 @@
+"""Hypothesis property tests on the cost model's invariants."""
+import math
+
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (amortized_costs, dies_per_wafer, re_cost,
+                        soc_system, split_system, yield_murphy,
+                        yield_negative_binomial, yield_poisson)
+
+areas = st.floats(min_value=1.0, max_value=900.0)
+d0s = st.floats(min_value=0.01, max_value=0.5)
+clusters = st.floats(min_value=1.0, max_value=10.0)
+
+
+@given(areas, d0s, clusters)
+@settings(max_examples=60, deadline=None)
+def test_yield_in_unit_interval(a, d0, c):
+    for f in (lambda: yield_negative_binomial(a, d0, c),
+              lambda: yield_poisson(a, d0),
+              lambda: yield_murphy(a, d0)):
+        y = float(f())
+        assert 0.0 < y <= 1.0
+
+
+@given(areas, areas, d0s, clusters)
+@settings(max_examples=60, deadline=None)
+def test_yield_monotone_decreasing_in_area(a1, a2, d0, c):
+    lo, hi = sorted((a1, a2))
+    assert float(yield_negative_binomial(hi, d0, c)) <= \
+        float(yield_negative_binomial(lo, d0, c)) + 1e-12
+
+
+@given(areas, d0s)
+@settings(max_examples=60, deadline=None)
+def test_negative_binomial_bounds_poisson(a, d0):
+    """Clustering helps: NB yield >= Poisson yield (c finite)."""
+    assert float(yield_negative_binomial(a, d0, 3.0)) >= \
+        float(yield_poisson(a, d0)) - 1e-6    # f32 rounding at tiny DS
+
+
+@given(areas, areas)
+@settings(max_examples=60, deadline=None)
+def test_dies_per_wafer_monotone(a1, a2):
+    lo, hi = sorted((a1, a2))
+    assert float(dies_per_wafer(hi)) <= float(dies_per_wafer(lo))
+
+
+@given(st.floats(min_value=50.0, max_value=900.0),
+       st.integers(min_value=1, max_value=8),
+       st.sampled_from(["MCM", "InFO", "2.5D"]),
+       st.sampled_from(["5nm", "7nm", "14nm"]))
+@settings(max_examples=40, deadline=None)
+def test_re_cost_always_positive_and_itemized(area, n, tech, node):
+    s = split_system("s", area, node, n, tech)
+    br = re_cost(s)
+    assert br.total > 0
+    for v in br.as_dict().values():
+        assert v >= 0.0
+    # multi-chip systems must carry D2D area overhead
+    assert s.silicon_area_mm2 >= area
+
+
+@given(st.floats(min_value=1e4, max_value=1e9),
+       st.floats(min_value=1e4, max_value=1e9))
+@settings(max_examples=40, deadline=None)
+def test_amortized_total_monotone_in_quantity(q1, q2):
+    lo, hi = sorted((q1, q2))
+    c_lo = amortized_costs([soc_system("s", 300.0, "7nm", quantity=lo)])["s"]
+    c_hi = amortized_costs([soc_system("s", 300.0, "7nm", quantity=hi)])["s"]
+    assert c_hi.total <= c_lo.total + 1e-9
+
+
+@given(st.floats(min_value=100.0, max_value=800.0),
+       st.sampled_from(["5nm", "7nm"]))
+@settings(max_examples=30, deadline=None)
+def test_chip_last_never_worse_than_chip_first(area, node):
+    s = split_system("s", area, node, 3, "2.5D")
+    assert re_cost(s, "chip-last").total <= re_cost(s, "chip-first").total
