@@ -1,0 +1,99 @@
+"""Microbenchmark: legacy per-system `re_cost` looping vs the jitted
+batched `CostEngine.total` on a 10k-system heterogeneous sweep.
+
+  PYTHONPATH=src python -m benchmarks.engine_bench [n_systems]
+
+Asserts (acceptance criteria of the API redesign):
+  * the engine matches the scalar reference within 1e-5 relative on a
+    sampled subset of the heterogeneous batch, and
+  * repeated engine sweeps over same-shaped batches add ZERO new traces —
+    the whole 10k-system evaluation is a single `jax.jit` trace with no
+    Python-loop fallback.
+"""
+import sys
+import time
+
+import jax
+
+from repro.core import CostEngine, SystemBatch, amortized_costs, re_cost, spec
+from repro.core.engine import TRACE_COUNTS
+
+NODES = ("5nm", "7nm", "12nm", "14nm", "28nm")
+INTEGRATIONS = ("SoC", "MCM", "InFO", "2.5D")
+
+
+def make_specs(n: int):
+    """n deterministic heterogeneous design points (no RNG: index-derived)."""
+    specs = []
+    for i in range(n):
+        integ = INTEGRATIONS[i % len(INTEGRATIONS)]
+        area = 150.0 + (i * 7919) % 700          # 150..850 mm^2
+        qty = 1e5 * (1 + i % 50)
+        if integ == "SoC":
+            specs.append({"kind": "soc", "name": f"s{i}", "area": float(area),
+                          "process": NODES[i % len(NODES)], "quantity": qty})
+        else:
+            k = 2 + i % 4                        # 2..5 chiplets
+            fracs = [1.0 + ((i + j) % 3) for j in range(k)]  # unequal slices
+            procs = [NODES[(i + j) % len(NODES)] for j in range(k)]
+            specs.append({"kind": "split", "name": f"s{i}",
+                          "area": float(area), "fractions": fracs,
+                          "processes": procs, "integration": integ,
+                          "quantity": qty})
+    return specs
+
+
+def run(n_systems: int = 10_000):
+    specs = make_specs(n_systems)
+    systems = [spec(d) for d in specs]
+
+    t0 = time.perf_counter()
+    batch = SystemBatch.from_systems(systems, share_nre=False)
+    t_pack = time.perf_counter() - t0
+
+    engine = CostEngine()
+    t0 = time.perf_counter()
+    tc = jax.block_until_ready(engine.total(batch))
+    t_first = time.perf_counter() - t0          # includes the jit trace
+
+    traces_after_first = dict(TRACE_COUNTS)
+    t0 = time.perf_counter()
+    reps = 5
+    for _ in range(reps):
+        tc = jax.block_until_ready(engine.total(batch))
+    t_engine = (time.perf_counter() - t0) / reps
+    assert dict(TRACE_COUNTS) == traces_after_first, \
+        "engine retraced on a same-shaped batch"
+
+    # Legacy path: Python loop, one system at a time (cap the loop so the
+    # benchmark stays polite at large n; extrapolate linearly).
+    n_legacy = min(n_systems, 1000)
+    t0 = time.perf_counter()
+    legacy = [amortized_costs([s])[s.name].total for s in systems[:n_legacy]]
+    t_loop = (time.perf_counter() - t0) * (n_systems / n_legacy)
+
+    # Parity spot-check on a stride through the heterogeneous batch.
+    worst = 0.0
+    for i in range(0, n_systems, max(1, n_systems // 97)):
+        ref = amortized_costs([systems[i]])[systems[i].name].total
+        rel = abs(ref - float(tc.total[i])) / ref
+        worst = max(worst, rel)
+    assert worst < 1e-5, f"engine/legacy mismatch: {worst:.2e}"
+
+    print(f"n_systems            : {n_systems}")
+    print(f"pack batch           : {t_pack*1e3:9.1f} ms (host, once per sweep shape)")
+    print(f"engine first call    : {t_first*1e3:9.1f} ms (includes jit trace)")
+    print(f"engine steady-state  : {t_engine*1e3:9.1f} ms / sweep")
+    print(f"legacy re_cost loop  : {t_loop*1e3:9.1f} ms "
+          f"(measured on {n_legacy}, extrapolated)")
+    print(f"speedup (steady)     : {t_loop/t_engine:9.0f}x")
+    print(f"parity worst rel err : {worst:.2e}")
+    print(f"trace counts         : {dict(TRACE_COUNTS)} (no retrace across "
+          f"{reps} repeat sweeps)")
+    return {"n": n_systems, "t_pack_s": t_pack, "t_first_s": t_first,
+            "t_engine_s": t_engine, "t_loop_s": t_loop,
+            "speedup": t_loop / t_engine, "worst_rel": worst}
+
+
+if __name__ == "__main__":
+    run(int(sys.argv[1]) if len(sys.argv) > 1 else 10_000)

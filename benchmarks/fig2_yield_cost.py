@@ -1,14 +1,18 @@
 """Paper Fig. 2: yield-area and cost-area relations per process node."""
 import jax.numpy as jnp
 
-from repro.core import cost_area_curve
+from repro.core import CostEngine, SystemBatch, cost_area_curve
+
 from .common import emit
+
+NODES = ("28nm", "14nm", "10nm", "7nm", "5nm")
+AREAS = (25.0, 50.0, 100.0, 200.0, 400.0, 600.0, 800.0)
 
 
 def run():
-    areas = jnp.asarray([25, 50, 100, 200, 400, 600, 800], jnp.float32)
+    areas = jnp.asarray(AREAS, jnp.float32)
     rows = []
-    for node in ("28nm", "14nm", "10nm", "7nm", "5nm"):
+    for node in NODES:
         c = cost_area_curve(node, areas)
         for i, a in enumerate(areas):
             rows.append({
@@ -17,9 +21,26 @@ def run():
                 "norm_cost_per_area": float(c["norm_cost_per_area"][i]),
             })
     emit("fig2_yield_cost_vs_area", rows)
+
     # headline check: 5nm 800mm2 die yields poorly and costs >2x per mm2
     c5 = cost_area_curve("5nm", jnp.asarray([800.0]))
     assert float(c5["yield"][0]) < 0.5
+
+    # API-drift guard: the batched engine must agree with the figure's
+    # claims — past the ~100mm2 sweet spot, SoC RE per mm^2 grows with
+    # area on every node (yield dominates), the 5nm 800mm2 die costs >2x
+    # per mm^2 vs 100mm2, and advanced nodes cost more per mm^2.
+    batch = SystemBatch.from_specs(
+        [{"kind": "soc", "area": float(a), "process": n}
+         for n in NODES for a in AREAS])
+    per_mm2 = (CostEngine().re(batch).total
+               / batch.chip_area.sum(-1)).reshape(len(NODES), len(AREAS))
+    big = per_mm2[:, AREAS.index(100.0):]
+    assert bool((big[:, 1:] >= big[:, :-1]).all()), \
+        "engine cost/area not monotone past 100mm2"
+    assert float(per_mm2[-1, -1]) > 2.0 * float(per_mm2[-1, AREAS.index(100.0)])
+    assert bool((per_mm2[1:] >= per_mm2[:-1]).all()), \
+        "newer node should cost more per mm^2"
     return rows
 
 

@@ -1,31 +1,52 @@
 """Paper Fig. 4: normalized RE cost across integrations x nodes x
-chiplet counts (all normalized to the 100 mm^2 SoC of each node)."""
-from repro.core import re_cost, soc_system, split_system
+chiplet counts (all normalized to the 100 mm^2 SoC of each node).
+
+The whole figure — every (node, area, integration, n) cell plus the
+per-node normalization baselines — is priced by one CostEngine call on a
+single heterogeneous SystemBatch.
+"""
+from repro.core import CostEngine, SystemBatch
+
 from .common import emit
+
+NODES = ("14nm", "7nm", "5nm")
+AREAS = (300.0, 500.0, 800.0, 900.0)
+INTEGRATIONS = ("MCM", "InFO", "2.5D")
+NS = (2, 3, 5)
 
 
 def run():
+    specs, meta = [], []
+    for node in NODES:
+        specs.append({"kind": "soc", "area": 100.0, "process": node})
+        meta.append((node, "base", None, None))
+        for area in AREAS:
+            specs.append({"kind": "soc", "area": area, "process": node})
+            meta.append((node, "SoC", area, 1))
+            for integ in INTEGRATIONS:
+                for n in NS:
+                    specs.append({"kind": "split", "area": area,
+                                  "process": node, "n": n,
+                                  "integration": integ})
+                    meta.append((node, integ, area, n))
+
+    batch = SystemBatch.from_specs(specs)
+    br = CostEngine().re(batch)
+    total, defects = br.total, br.chip_defects
+    packaging = br.packaging_cost
+
+    base = {m[0]: float(total[i]) for i, m in enumerate(meta)
+            if m[1] == "base"}
     rows = []
-    for node in ("14nm", "7nm", "5nm"):
-        base = re_cost(soc_system("base", 100.0, node)).total
-        for area in (300.0, 500.0, 800.0, 900.0):
-            soc = re_cost(soc_system("s", area, node))
-            rows.append({
-                "node": node, "area_mm2": area, "integration": "SoC",
-                "n_chiplets": 1, "total_norm": soc.total / base,
-                "die_defects_norm": soc.chip_defects / base,
-                "packaging_norm": soc.packaging_cost / base,
-            })
-            for integ in ("MCM", "InFO", "2.5D"):
-                for n in (2, 3, 5):
-                    br = re_cost(split_system("m", area, node, n, integ))
-                    rows.append({
-                        "node": node, "area_mm2": area,
-                        "integration": integ, "n_chiplets": n,
-                        "total_norm": br.total / base,
-                        "die_defects_norm": br.chip_defects / base,
-                        "packaging_norm": br.packaging_cost / base,
-                    })
+    for i, (node, integ, area, n) in enumerate(meta):
+        if integ == "base":
+            continue
+        rows.append({
+            "node": node, "area_mm2": area, "integration": integ,
+            "n_chiplets": n, "total_norm": float(total[i]) / base[node],
+            "die_defects_norm": float(defects[i]) / base[node],
+            "packaging_norm": float(packaging[i]) / base[node],
+        })
     emit("fig4_re_cost_normalized", rows)
     return rows
 

@@ -1,33 +1,47 @@
 """Paper Fig. 6: total (RE + amortized NRE) cost structure of a single
-800 mm^2 5nm system vs production quantity."""
-from repro.core import amortized_costs, soc_system, split_system
+800 mm^2 5nm system vs production quantity.
+
+All (quantity x packaging) cells are priced in one CostEngine call;
+``share_nre=False`` keeps every cell its own standalone product group,
+as in the paper's single-system experiment.
+"""
+from repro.core import CostEngine, SystemBatch
+
 from .common import emit
+
+QUANTITIES = (2e5, 5e5, 1e6, 2e6, 5e6, 1e7)
+VARIANTS = (("SoC", {"kind": "soc", "area": 800.0, "process": "5nm"}),
+            ("MCM-2", {"kind": "split", "area": 800.0, "process": "5nm",
+                       "n": 2, "integration": "MCM"}),
+            ("InFO-2", {"kind": "split", "area": 800.0, "process": "5nm",
+                        "n": 2, "integration": "InFO"}),
+            ("2.5D-2", {"kind": "split", "area": 800.0, "process": "5nm",
+                        "n": 2, "integration": "2.5D"}))
 
 
 def run():
+    specs, meta = [], []
+    for qty in QUANTITIES:
+        for label, s in VARIANTS:
+            specs.append(dict(s, quantity=qty))
+            meta.append((qty, label))
+
+    batch = SystemBatch.from_specs(specs, share_nre=False)
+    tc = CostEngine().total(batch)
+
     rows = []
-    for qty in (2e5, 5e5, 1e6, 2e6, 5e6, 1e7):
-        soc = amortized_costs(
-            [soc_system("soc", 800.0, "5nm", quantity=qty)])["soc"]
-        base = soc.re.total
-        for label, sys_ in (
-                ("SoC", soc_system("s", 800.0, "5nm", quantity=qty)),
-                ("MCM-2", split_system("s", 800.0, "5nm", 2, "MCM",
-                                       quantity=qty)),
-                ("InFO-2", split_system("s", 800.0, "5nm", 2, "InFO",
-                                        quantity=qty)),
-                ("2.5D-2", split_system("s", 800.0, "5nm", 2, "2.5D",
-                                        quantity=qty))):
-            c = amortized_costs([sys_])["s"]
-            rows.append({
-                "quantity": qty, "system": label,
-                "re_norm": c.re.total / base,
-                "nre_modules_norm": c.nre_modules / base,
-                "nre_chips_norm": c.nre_chips / base,
-                "nre_pkg_norm": c.nre_packages / base,
-                "nre_d2d_norm": c.nre_d2d / base,
-                "total_norm": c.total / base,
-            })
+    for i, (qty, label) in enumerate(meta):
+        if label == "SoC":
+            base = float(tc.re.total[i])   # per-quantity RE baseline
+        rows.append({
+            "quantity": qty, "system": label,
+            "re_norm": float(tc.re.total[i]) / base,
+            "nre_modules_norm": float(tc.nre.modules[i]) / base,
+            "nre_chips_norm": float(tc.nre.chips[i]) / base,
+            "nre_pkg_norm": float(tc.nre.packages[i]) / base,
+            "nre_d2d_norm": float(tc.nre.d2d[i]) / base,
+            "total_norm": float(tc.total[i]) / base,
+        })
     emit("fig6_single_system_total_cost", rows)
     return rows
 

@@ -1,13 +1,12 @@
 """Architecture exploration: sweep the (area x n_chiplets x tech x node)
-design space with the vmapped explorer, print the Pareto frontier, and
-run the (beyond-paper) differentiable partitioner.
+design space with the engine-backed explorer, print the Pareto frontier,
+price heterogeneous (mixed-node) partitions, and run the (beyond-paper)
+differentiable partitioner.
 
   PYTHONPATH=src python examples/cost_explorer.py
 """
-import jax.numpy as jnp
-
-from repro.core import pareto_front, sweep_partitions
-from repro.core.gradient import optimize_chiplet_count
+from repro.core import pareto_front, sweep_hetero_partitions, sweep_partitions
+from repro.core.gradient import optimize_chiplet_count, optimize_uneven_split
 
 
 def main():
@@ -32,12 +31,30 @@ def main():
         print(f"  {p['area']:5.0f}mm2  ${p['cost']:8.0f}  "
               f"{p['node']} {p['integ']} n={p['n']}")
 
+    print("\nheterogeneous partitions of an 800mm2 module (MCM):")
+    rows = sweep_hetero_partitions(800.0, [
+        [(1.0, "5nm")],
+        [(0.5, "5nm"), (0.5, "5nm")],
+        [(0.5, "5nm"), (0.5, "7nm")],
+        [(0.5, "5nm"), (0.25, "7nm"), (0.25, "12nm")],
+    ], integration="MCM")
+    for r in rows:
+        parts = " + ".join(f"{f:.2f}@{p}" for f, p in r["partition"])
+        print(f"  ${r['total']:8.0f}  {parts}")
+
     print("\ndifferentiable partitioner (relaxed chiplet count):")
     for node in ("7nm", "5nm"):
         r = optimize_chiplet_count(node, "MCM", 800.0)
         print(f"  {node} 800mm2 MCM: n*={r.n_relaxed:.2f} -> "
               f"round {r.n_rounded}, cost ${r.cost_rounded:.0f} "
               f"(SoC ${r.cost_soc:.0f})")
+
+    print("\nuneven module-to-chiplet assignment (full engine objective):")
+    u = optimize_uneven_split("5nm", "MCM", [300.0, 200.0, 100.0, 100.0,
+                                             100.0], 3)
+    print(f"  assignment {u['assignment']}  chip areas "
+          f"{[round(a) for a in u['chip_areas']]}  "
+          f"hard cost ${u['hard_cost']:.0f}")
 
 
 if __name__ == "__main__":

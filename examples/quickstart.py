@@ -1,18 +1,25 @@
 """Quickstart: the Chiplet Actuary cost model in five minutes.
 
   PYTHONPATH=src python examples/quickstart.py
+
+The batched API (spec dicts -> SystemBatch -> CostEngine) is the primary
+path; the scalar `re_cost(System)` reference is shown once at the end.
 """
-from repro.core import (amortized_costs, best_partition, re_cost,
-                        soc_system, split_system)
+from repro.core import (CostEngine, SystemBatch, best_partition, re_cost,
+                        soc_system)
 
 
 def main():
+    engine = CostEngine()
+
     # 1. Price a monolithic 800 mm^2 5nm SoC.
-    soc = soc_system("my_soc", 800.0, "5nm", quantity=1e6)
-    br = re_cost(soc)
-    print(f"monolithic 800mm2 5nm RE: ${br.total:,.0f}"
-          f"  (defects: ${br.chip_defects:,.0f} = "
-          f"{br.chip_defects/br.total:.0%})")
+    batch = SystemBatch.from_specs(
+        [{"kind": "soc", "name": "my_soc", "area": 800.0, "process": "5nm",
+          "quantity": 1e6}])
+    br = engine.re(batch)
+    total, defects = float(br.total[0]), float(br.chip_defects[0])
+    print(f"monolithic 800mm2 5nm RE: ${total:,.0f}"
+          f"  (defects: ${defects:,.0f} = {defects/total:.0%})")
 
     # 2. Split it into chiplets — how many is optimal?
     for integ in ("MCM", "InFO", "2.5D"):
@@ -20,12 +27,27 @@ def main():
         print(f"{integ:5s}: best n={b['best_n']}  "
               f"${b['best_cost']:,.0f}  saving {b['saving']:.1%}")
 
-    # 3. Total cost including NRE amortization at 1M units.
-    mcm = split_system("my_mcm", 800.0, "5nm", 3, "MCM", quantity=1e6)
-    costs = amortized_costs([soc, mcm])
-    for name, c in costs.items():
-        print(f"{name}: RE ${c.re.total:,.0f} + NRE/unit "
-              f"${c.nre_total:,.0f} = ${c.total:,.0f}")
+    # 3. Total cost including NRE amortization at 1M units — one engine
+    #    call prices the whole heterogeneous batch (even a mixed-node
+    #    split: half the module on 5nm, the rest on two 7nm chiplets).
+    group = SystemBatch.from_specs([
+        {"kind": "soc", "name": "my_soc", "area": 800.0, "process": "5nm",
+         "quantity": 1e6},
+        {"kind": "split", "name": "my_mcm", "area": 800.0, "process": "5nm",
+         "n": 3, "integration": "MCM", "quantity": 1e6},
+        {"kind": "split", "name": "my_hetero", "area": 800.0,
+         "fractions": [0.5, 0.25, 0.25], "processes": ["5nm", "7nm", "7nm"],
+         "integration": "MCM", "quantity": 1e6},
+    ], share_nre=True)
+    tc = engine.total(group)
+    for i, name in enumerate(group.names):
+        print(f"{name}: RE ${float(tc.re.total[i]):,.0f} + NRE/unit "
+              f"${float(tc.nre.total[i]):,.0f} = ${float(tc.total[i]):,.0f}")
+
+    # 4. The scalar reference path gives the same answer, one system at a
+    #    time (pinned to the engine by tests/test_engine.py).
+    ref = re_cost(soc_system("my_soc", 800.0, "5nm", quantity=1e6))
+    print(f"scalar reference RE: ${ref.total:,.0f}")
 
 
 if __name__ == "__main__":

@@ -4,27 +4,38 @@ Public API of the paper's contribution:
 
   technology   -- process-node / integration-technology parameter DB
   yield_model  -- Eq. (1) yield curves + wafer geometry
-  system       -- module / chip / package algebra (Eq. 3)
-  re_cost      -- recurring cost, Eqs. (4)-(5), five-way breakdown
-  nre_cost     -- non-recurring cost, Eqs. (6)-(8), amortization
+  system       -- module / chip / package algebra (Eq. 3) + spec() builder
+  batch        -- SystemBatch: N heterogeneous systems as one pytree
+  engine       -- CostEngine: batched, jit/vmap/grad-able Eqs. (4)-(8)
+  re_cost      -- scalar reference RE path, Eqs. (4)-(5), five-way breakdown
+  nre_cost     -- scalar reference NRE path, Eqs. (6)-(8), amortization
   reuse        -- SCMS / OCME / FSMC scheme builders (Sec. 5)
-  explorer     -- vmapped design-space sweeps and partition search
+  explorer     -- engine-backed design-space sweeps and partition search
   gradient     -- (beyond paper) differentiable partitioning
   codesign     -- (beyond paper) accelerator perf-per-dollar bridge
+
+The batched path (``SystemBatch`` + ``CostEngine``) is the primary API;
+the scalar ``re_cost``/``amortized_costs`` path is kept as the readable
+reference implementation and is pinned to the engine by parity tests.
+``re_cost_split`` is deprecated (use the engine, or
+``engine.re_split_relaxed`` for the continuous relaxation).
 """
 from .technology import (INTEGRATION_TECHS, PROCESS_NODES, IntegrationTech,
                          ProcessNode, node, tech)
 from .yield_model import (dies_per_wafer, good_die_cost, raw_die_cost,
                           yield_murphy, yield_negative_binomial, yield_poisson)
 from .system import (Chip, Module, System, d2d_module, make_chip, soc_system,
-                     split_system)
+                     spec, split_system)
+from .batch import SystemBatch
+from .engine import (CostEngine, NREBreakdown, TotalCost, package_flow_terms,
+                     re_split_relaxed, silicon_unit_costs)
 from .re_cost import REBreakdown, chip_costs, re_cost, re_cost_split
 from .nre_cost import NREEntities, UnitCost, amortized_costs, group_nre
 from .reuse import (fsmc_enumerate, fsmc_num_systems, fsmc_situations,
                     ocme_soc_equivalents, ocme_systems, scms_soc_equivalents,
                     scms_systems)
 from .explorer import (best_partition, cost_area_curve, pareto_front,
-                       sweep_partitions)
+                       sweep_hetero_partitions, sweep_partitions, sweep_specs)
 from .codesign import (AcceleratorSpec, accelerator_systems, cost_per_step,
                        price_accelerators)
 
@@ -32,12 +43,15 @@ __all__ = [
     "INTEGRATION_TECHS", "PROCESS_NODES", "IntegrationTech", "ProcessNode",
     "node", "tech", "dies_per_wafer", "good_die_cost", "raw_die_cost",
     "yield_murphy", "yield_negative_binomial", "yield_poisson", "Chip",
-    "Module", "System", "d2d_module", "make_chip", "soc_system",
-    "split_system", "REBreakdown", "chip_costs", "re_cost", "re_cost_split",
+    "Module", "System", "d2d_module", "make_chip", "soc_system", "spec",
+    "split_system", "SystemBatch", "CostEngine", "NREBreakdown", "TotalCost",
+    "package_flow_terms", "re_split_relaxed", "silicon_unit_costs",
+    "REBreakdown", "chip_costs", "re_cost", "re_cost_split",
     "NREEntities", "UnitCost", "amortized_costs", "group_nre",
     "fsmc_enumerate", "fsmc_num_systems", "fsmc_situations",
     "ocme_soc_equivalents", "ocme_systems", "scms_soc_equivalents",
     "scms_systems", "best_partition", "cost_area_curve", "pareto_front",
-    "sweep_partitions", "AcceleratorSpec", "accelerator_systems",
-    "cost_per_step", "price_accelerators",
+    "sweep_hetero_partitions", "sweep_partitions", "sweep_specs",
+    "AcceleratorSpec", "accelerator_systems", "cost_per_step",
+    "price_accelerators",
 ]

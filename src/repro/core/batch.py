@@ -1,0 +1,307 @@
+"""Batched struct-of-arrays representation of heterogeneous systems.
+
+:class:`SystemBatch` encodes N *arbitrary* systems (mixed nodes, unequal
+chip areas, different integration technologies, package reuse) as a JAX
+pytree of arrays, padded to ``max_chips`` chips per system.  It is the
+input type of :class:`repro.core.engine.CostEngine`, which evaluates the
+paper's full RE + NRE model (Eqs. 4-8) for the whole batch in one jitted,
+vmap/grad-compatible trace — the design-space-sweep representation the
+scalar ``System`` dataclasses cannot provide.
+
+Construction happens host-side (cheap, once per sweep shape); everything
+after ``from_systems`` / ``from_specs`` is pure array math.  All float
+leaves may be swapped (``dataclasses.replace``) for traced values, which
+is how the differentiable partitioner sweeps areas/quantities without
+rebuilding the batch.
+
+NRE amortization structure (who shares which design entity) is encoded as
+integer id arrays + flat (instance -> system) index maps so the Eq. (6)-(8)
+entity de-duplication runs in-graph via segment sums:
+
+* chip designs   -> ``chip_entity_id``  (N, C) into ``chip_entity_*``
+* package designs-> ``pkg_entity_id``   (N,)   into ``pkg_entity_*``
+* modules        -> flat ``mod_sys``/``mod_entity`` instance lists
+* D2D interfaces -> flat ``d2d_sys``/``d2d_entity`` instance lists
+
+``share_nre=True`` (default) treats the batch as one co-produced group,
+matching ``nre_cost.amortized_costs(systems)``; ``share_nre=False`` prices
+every system as its own group (entity keys namespaced per system), which
+is what independent design-point sweeps want.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .system import System, spec
+from .technology import node, tech
+
+_FLOAT = jnp.float32
+_INT = jnp.int32
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SystemBatch:
+    """N heterogeneous systems as a struct-of-arrays pytree.
+
+    Shapes: N = number of systems, C = max_chips (padded), E* = number of
+    unique design entities, M/D = total module / D2D instances.
+    """
+
+    # --- per chip slot, (N, C) float; padded slots are zeroed + masked ---
+    chip_area: jnp.ndarray          # die area incl. D2D share, mm^2
+    chip_defect: jnp.ndarray        # defect density, defects/cm^2
+    chip_wafer_cost: jnp.ndarray    # USD / wafer
+    chip_cluster: jnp.ndarray       # negative-binomial c, Eq. (1)
+    chip_wafer_yield: jnp.ndarray   # Y_wafer, Eq. (2)
+    chip_sort_cost: jnp.ndarray     # USD / wafer (probe/sort)
+    chip_bump_cost: jnp.ndarray     # USD / mm^2 (C4 bumping)
+    chip_mask: jnp.ndarray          # 1.0 for a real chip, 0.0 for padding
+    # --- per system, (N,) float ---
+    package_area: jnp.ndarray       # resolved S_p (respects forced reuse area)
+    package_area_factor: jnp.ndarray
+    substrate_cost: jnp.ndarray     # USD / mm^2
+    substrate_layer: jnp.ndarray    # layer growth factor
+    interposer_cost: jnp.ndarray    # USD / mm^2 (0 for SoC/MCM)
+    interposer_defect: jnp.ndarray  # defects / cm^2
+    interposer_area_factor: jnp.ndarray
+    interposer_cluster: jnp.ndarray
+    y2_chip_bond: jnp.ndarray
+    y3_substrate_bond: jnp.ndarray
+    assembly_yield: jnp.ndarray
+    bond_cost_per_chip: jnp.ndarray
+    quantity: jnp.ndarray
+    # --- NRE entity structure ---
+    chip_entity_id: jnp.ndarray     # (N, C) int, padded slots point at 0
+    chip_entity_area: jnp.ndarray   # (Ec,)
+    chip_entity_k: jnp.ndarray      # (Ec,) K_c per mm^2
+    chip_entity_fixed: jnp.ndarray  # (Ec,) C per chip design
+    pkg_entity_id: jnp.ndarray      # (N,) int
+    pkg_entity_area: jnp.ndarray    # (Ep,)
+    pkg_entity_k: jnp.ndarray       # (Ep,) K_p per mm^2
+    pkg_entity_fixed: jnp.ndarray   # (Ep,) C_p
+    mod_sys: jnp.ndarray            # (M,) int — owning system of the instance
+    mod_entity: jnp.ndarray         # (M,) int
+    mod_entity_area: jnp.ndarray    # (Em,)
+    mod_entity_k: jnp.ndarray       # (Em,) K_m per mm^2
+    d2d_sys: jnp.ndarray            # (D,) int
+    d2d_entity: jnp.ndarray         # (D,) int
+    d2d_entity_nre: jnp.ndarray     # (Ed,)
+    # --- static metadata (pytree aux) ---
+    names: Tuple[str, ...] = ()
+
+    # -- pytree protocol ----------------------------------------------------
+    _LEAVES = None  # filled in after class creation
+
+    def tree_flatten(self):
+        # names are display-only metadata and deliberately NOT aux data:
+        # aux participates in the jit cache key, and two batches that differ
+        # only in names must share one compiled trace.  Reconstructed
+        # (traced) batches therefore carry empty names.
+        children = tuple(getattr(self, f) for f in self._LEAVES)
+        return children, None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    # -- convenience --------------------------------------------------------
+    @property
+    def n_systems(self) -> int:
+        return self.chip_area.shape[0]
+
+    @property
+    def max_chips(self) -> int:
+        return self.chip_area.shape[1]
+
+    @property
+    def n_chips(self) -> jnp.ndarray:
+        """(N,) number of real chips per system."""
+        return self.chip_mask.sum(axis=-1)
+
+    def replace(self, **kw) -> "SystemBatch":
+        """Functional update — the hook for traced sweeps/gradients."""
+        return dataclasses.replace(self, **kw)
+
+    def __len__(self) -> int:
+        return self.n_systems
+
+    # -- constructors --------------------------------------------------------
+    @classmethod
+    def from_systems(cls, systems: Sequence[System],
+                     max_chips: Optional[int] = None,
+                     share_nre: bool = True) -> "SystemBatch":
+        """Pack :class:`System` objects into one batch.
+
+        ``share_nre=True`` amortizes design entities across the whole batch
+        (the batch is one product group, as in ``amortized_costs``) and
+        therefore requires unique system names; ``share_nre=False`` prices
+        each system as a standalone group.
+        """
+        systems = list(systems)
+        if not systems:
+            raise ValueError("empty system batch")
+        if share_nre:
+            names = [s.name for s in systems]
+            if len(set(names)) != len(names):
+                raise ValueError(
+                    "system names must be unique within a shared-NRE batch")
+        n = len(systems)
+        c = max(s.n_chips for s in systems)
+        if max_chips is not None:
+            if max_chips < c:
+                raise ValueError(f"max_chips={max_chips} < widest system {c}")
+            c = max_chips
+
+        f = {k: np.zeros((n, c), np.float32) for k in
+             ("area", "defect", "wafer_cost", "cluster", "wafer_yield",
+              "sort_cost", "bump_cost", "mask")}
+        f["wafer_yield"][:] = 1.0      # benign padding
+        f["cluster"][:] = 1.0
+        sysf = {k: np.zeros((n,), np.float32) for k in
+                ("package_area", "package_area_factor", "substrate_cost",
+                 "substrate_layer", "interposer_cost", "interposer_defect",
+                 "interposer_area_factor", "interposer_cluster",
+                 "y2_chip_bond", "y3_substrate_bond", "assembly_yield",
+                 "bond_cost_per_chip", "quantity")}
+
+        chip_ents: Dict = {}
+        chip_ent_rows: List[Tuple[float, float, float]] = []
+        pkg_ents: Dict = {}
+        pkg_ent_rows: List[Tuple[float, float, float]] = []
+        mod_ents: Dict = {}
+        mod_ent_rows: List[Tuple[float, float]] = []
+        d2d_ents: Dict = {}
+        d2d_ent_rows: List[float] = []
+        chip_ids = np.zeros((n, c), np.int32)
+        mod_sys: List[int] = []
+        mod_ent: List[int] = []
+        d2d_sys: List[int] = []
+        d2d_ent: List[int] = []
+        pkg_ids = np.zeros((n,), np.int32)
+
+        def _entity(table, rows, key, make_row):
+            if key not in table:
+                table[key] = len(rows)
+                rows.append(make_row())
+            return table[key]
+
+        for i, s in enumerate(systems):
+            t = s.tech
+            ns = "" if share_nre else f"#{i}/"
+            sysf["package_area"][i] = s.package_area
+            sysf["package_area_factor"][i] = t.package_area_factor
+            sysf["substrate_cost"][i] = t.substrate_cost_per_mm2
+            sysf["substrate_layer"][i] = t.substrate_layer_factor
+            sysf["interposer_cost"][i] = t.interposer_cost_per_mm2
+            sysf["interposer_defect"][i] = t.interposer_defect_density
+            sysf["interposer_area_factor"][i] = t.interposer_area_factor
+            sysf["interposer_cluster"][i] = node(t.interposer_node).cluster_param
+            sysf["y2_chip_bond"][i] = t.y2_chip_bond
+            sysf["y3_substrate_bond"][i] = t.y3_substrate_bond
+            sysf["assembly_yield"][i] = t.assembly_yield
+            sysf["bond_cost_per_chip"][i] = t.bond_cost_per_chip
+            sysf["quantity"][i] = s.quantity
+
+            pkg_ids[i] = _entity(
+                pkg_ents, pkg_ent_rows, ns + s.package_id,
+                lambda: (s.package_area, t.nre_package_per_mm2,
+                         t.nre_fixed_per_package))
+
+            for j, chip in enumerate(s.chips):
+                nd = chip.node
+                f["area"][i, j] = chip.area_mm2
+                f["defect"][i, j] = chip.defect_density
+                f["wafer_cost"][i, j] = nd.wafer_cost
+                f["cluster"][i, j] = nd.cluster_param
+                f["wafer_yield"][i, j] = nd.wafer_yield
+                f["sort_cost"][i, j] = nd.wafer_sort_cost
+                f["bump_cost"][i, j] = nd.bump_cost_per_mm2
+                f["mask"][i, j] = 1.0
+                chip_ids[i, j] = _entity(
+                    chip_ents, chip_ent_rows, ns + chip.name,
+                    lambda: (chip.area_mm2, nd.nre_chip_per_mm2,
+                             nd.nre_fixed_per_chip))
+                for m in chip.modules:
+                    if m.is_d2d:
+                        d2d_sys.append(i)
+                        d2d_ent.append(_entity(
+                            d2d_ents, d2d_ent_rows, ns + m.process,
+                            lambda: node(m.process).nre_d2d))
+                    else:
+                        mod_sys.append(i)
+                        mod_ent.append(_entity(
+                            mod_ents, mod_ent_rows, ns + m.name,
+                            lambda: (m.area_mm2, m.node.nre_module_per_mm2)))
+
+        def arr(x, dt=_FLOAT):
+            return jnp.asarray(np.asarray(x, dtype=np.float32
+                                          if dt is _FLOAT else np.int32))
+
+        chip_rows = np.asarray(chip_ent_rows, np.float32).reshape(-1, 3)
+        pkg_rows = np.asarray(pkg_ent_rows, np.float32).reshape(-1, 3)
+        mod_rows = np.asarray(mod_ent_rows, np.float32).reshape(-1, 2)
+        return cls(
+            chip_area=arr(f["area"]), chip_defect=arr(f["defect"]),
+            chip_wafer_cost=arr(f["wafer_cost"]),
+            chip_cluster=arr(f["cluster"]),
+            chip_wafer_yield=arr(f["wafer_yield"]),
+            chip_sort_cost=arr(f["sort_cost"]),
+            chip_bump_cost=arr(f["bump_cost"]), chip_mask=arr(f["mask"]),
+            package_area=arr(sysf["package_area"]),
+            package_area_factor=arr(sysf["package_area_factor"]),
+            substrate_cost=arr(sysf["substrate_cost"]),
+            substrate_layer=arr(sysf["substrate_layer"]),
+            interposer_cost=arr(sysf["interposer_cost"]),
+            interposer_defect=arr(sysf["interposer_defect"]),
+            interposer_area_factor=arr(sysf["interposer_area_factor"]),
+            interposer_cluster=arr(sysf["interposer_cluster"]),
+            y2_chip_bond=arr(sysf["y2_chip_bond"]),
+            y3_substrate_bond=arr(sysf["y3_substrate_bond"]),
+            assembly_yield=arr(sysf["assembly_yield"]),
+            bond_cost_per_chip=arr(sysf["bond_cost_per_chip"]),
+            quantity=arr(sysf["quantity"]),
+            chip_entity_id=arr(chip_ids, _INT),
+            chip_entity_area=arr(chip_rows[:, 0]),
+            chip_entity_k=arr(chip_rows[:, 1]),
+            chip_entity_fixed=arr(chip_rows[:, 2]),
+            pkg_entity_id=arr(pkg_ids, _INT),
+            pkg_entity_area=arr(pkg_rows[:, 0]),
+            pkg_entity_k=arr(pkg_rows[:, 1]),
+            pkg_entity_fixed=arr(pkg_rows[:, 2]),
+            mod_sys=arr(mod_sys, _INT), mod_entity=arr(mod_ent, _INT),
+            mod_entity_area=arr(mod_rows[:, 0]),
+            mod_entity_k=arr(mod_rows[:, 1]),
+            d2d_sys=arr(d2d_sys, _INT), d2d_entity=arr(d2d_ent, _INT),
+            d2d_entity_nre=arr(d2d_ent_rows),
+            names=tuple(s.name for s in systems),
+        )
+
+    @classmethod
+    def from_specs(cls, specs: Sequence[Mapping],
+                   max_chips: Optional[int] = None,
+                   share_nre: bool = False) -> "SystemBatch":
+        """Build a batch straight from declarative spec dicts.
+
+        Specs without a ``name`` get a unique positional one.  Defaults to
+        ``share_nre=False`` — spec sweeps are usually independent design
+        points, not a co-produced group.
+        """
+        systems = []
+        for i, d in enumerate(specs):
+            d = dict(d)
+            d.setdefault("name", f"sys{i}")
+            systems.append(spec(d))
+        return cls.from_systems(systems, max_chips=max_chips,
+                                share_nre=share_nre)
+
+
+SystemBatch._LEAVES = tuple(
+    fld.name for fld in dataclasses.fields(SystemBatch)
+    if fld.name != "names")

@@ -15,9 +15,12 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence
 
-from .nre_cost import amortized_costs
+from .batch import SystemBatch
+from .engine import CostEngine
 from .system import Module, System, make_chip
 from .technology import node, tech
+
+_ENGINE = CostEngine()
 
 # TPU v5e-class peak per chip (brief's hardware constants).
 PEAK_FLOPS_BF16 = 197e12       # FLOP/s
@@ -80,18 +83,26 @@ def accelerator_systems(spec: AcceleratorSpec, quantity: float = 1e6
 
 def price_accelerators(spec: AcceleratorSpec, quantity: float = 1e6
                        ) -> Dict[str, Dict[str, float]]:
-    """Amortized unit cost of every packaging candidate of one accelerator."""
+    """Amortized unit cost of every packaging candidate of one accelerator.
+
+    All candidates are priced in one :class:`CostEngine` trace;
+    ``share_nre=False`` keeps each candidate its own product group (the
+    candidates are alternatives, not co-produced systems).
+    """
+    candidates = accelerator_systems(spec, quantity)
+    batch = SystemBatch.from_systems(list(candidates.values()),
+                                     share_nre=False)
+    tc = _ENGINE.total(batch)
     out: Dict[str, Dict[str, float]] = {}
-    for label, sys_ in accelerator_systems(spec, quantity).items():
-        costs = amortized_costs([sys_])
-        uc = costs[sys_.name]
+    for i, label in enumerate(candidates):
+        total = float(tc.total[i])
         out[label] = {
-            "unit_cost": uc.total,
-            "re": uc.re.total,
-            "nre_per_unit": uc.nre_total,
-            "die_cost": uc.re.die_cost,
-            "packaging_cost": uc.re.packaging_cost,
-            "usd_per_pflops": uc.total / (spec.peak_flops / 1e15),
+            "unit_cost": total,
+            "re": float(tc.re.total[i]),
+            "nre_per_unit": float(tc.nre.total[i]),
+            "die_cost": float(tc.re.die_cost[i]),
+            "packaging_cost": float(tc.re.packaging_cost[i]),
+            "usd_per_pflops": total / (spec.peak_flops / 1e15),
         }
     return out
 

@@ -1,0 +1,318 @@
+"""Unified, batchable cost engine — one jnp implementation of Eqs. (4)-(8).
+
+:class:`CostEngine` evaluates the paper's full RE model (five-way
+breakdown, both chip-last and chip-first flows) and NRE amortization for a
+whole :class:`~repro.core.batch.SystemBatch` of *heterogeneous* systems in
+a single jit trace.  It subsumes the old ``re_cost_split`` jnp kernel
+(which only handled homogeneous even splits and hardcoded a 0.99 wafer
+yield) and mirrors the scalar reference path ``re_cost.re_cost`` exactly —
+``tests/test_engine.py`` pins the two to 1e-5 relative parity.
+
+The shared primitives (:func:`silicon_unit_costs`,
+:func:`package_flow_terms`) are also the building blocks of the
+continuous-relaxation kernel in :mod:`repro.core.gradient`, so every
+consumer of the model now draws on one source of truth for wafer yield,
+sort/bump costs and the flow formulas.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .batch import SystemBatch
+from .re_cost import REBreakdown
+from .yield_model import dies_per_wafer, raw_die_cost, yield_negative_binomial
+
+_EPS = 1e-30
+
+# Python-body execution counter: increments only when jax actually traces,
+# so benchmarks/tests can assert a sweep compiled exactly once.
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+# ---------------------------------------------------------------------------
+# Shared primitives (Eq. 2 silicon terms, Eq. 4/5 flow terms)
+# ---------------------------------------------------------------------------
+
+
+def silicon_unit_costs(area_mm2, wafer_cost, defect_density, cluster,
+                       wafer_yield, sort_cost, bump_cost):
+    """Per-die (raw, defect overhead, KGD, die yield) — Eqs. (1)-(2).
+
+    Matches ``re_cost.chip_costs``: sort and bump are folded into the raw
+    die and the die yield includes the per-node wafer yield.
+    """
+    dpw = dies_per_wafer(area_mm2)
+    raw = raw_die_cost(area_mm2, wafer_cost) + sort_cost / dpw \
+        + bump_cost * area_mm2
+    y_die = yield_negative_binomial(area_mm2, defect_density,
+                                    cluster) * wafer_yield
+    kgd = raw / y_die
+    return raw, kgd - raw, kgd, y_die
+
+
+def package_flow_terms(flow: str, *, c_interposer, y1, c_substrate, c_bond,
+                       kgd_total, y2n, y3):
+    """(raw_package, package_defects, wasted_kgd) under one flow — Eq. (4)/(5)."""
+    raw_package = c_interposer + c_substrate + c_bond
+    if flow == "chip-last":
+        package_defects = (c_interposer * (1.0 / (y1 * y2n * y3) - 1.0)
+                           + (c_substrate + c_bond) * (1.0 / y3 - 1.0))
+        wasted_kgd = kgd_total * (1.0 / (y2n * y3) - 1.0)
+    elif flow == "chip-first":
+        y_all = y1 * y2n * y3
+        package_defects = raw_package * (1.0 / y_all - 1.0)
+        wasted_kgd = kgd_total * (1.0 / y_all - 1.0)
+    else:
+        raise ValueError(f"unknown flow {flow!r}")
+    return raw_package, package_defects, wasted_kgd
+
+
+# ---------------------------------------------------------------------------
+# Batched RE / NRE implementations
+# ---------------------------------------------------------------------------
+
+
+def _re_impl(b: SystemBatch, flow: str) -> REBreakdown:
+    TRACE_COUNTS["re"] += 1
+    mask = b.chip_mask
+    raw, defect, kgd, _ = silicon_unit_costs(
+        b.chip_area, b.chip_wafer_cost, b.chip_defect, b.chip_cluster,
+        b.chip_wafer_yield, b.chip_sort_cost, b.chip_bump_cost)
+    raw_chips = (raw * mask).sum(-1)
+    chip_defects = (defect * mask).sum(-1)
+    kgd_total = (kgd * mask).sum(-1)
+    n_chips = mask.sum(-1)
+
+    # Interposer sized for the package *design*'s silicon capacity (Sec. 5.1:
+    # a reused oversized package pays its full interposer).
+    design_silicon = b.package_area / b.package_area_factor
+    int_area = design_silicon * b.interposer_area_factor
+    c_interposer = int_area * b.interposer_cost
+    y1 = jnp.where(
+        b.interposer_area_factor > 0.0,
+        yield_negative_binomial(int_area, b.interposer_defect,
+                                b.interposer_cluster),
+        1.0)
+    c_substrate = b.package_area * b.substrate_cost * b.substrate_layer
+    c_bond = b.bond_cost_per_chip * n_chips
+    y2n = b.y2_chip_bond ** n_chips
+    y3 = b.y3_substrate_bond * b.assembly_yield
+
+    raw_package, package_defects, wasted_kgd = package_flow_terms(
+        flow, c_interposer=c_interposer, y1=y1, c_substrate=c_substrate,
+        c_bond=c_bond, kgd_total=kgd_total, y2n=y2n, y3=y3)
+    return REBreakdown(raw_chips=raw_chips, chip_defects=chip_defects,
+                       raw_package=raw_package,
+                       package_defects=package_defects,
+                       wasted_kgd=wasted_kgd)
+
+
+@dataclasses.dataclass
+class NREBreakdown:
+    """Per-unit amortized NRE of every system in a batch (array fields)."""
+
+    modules: jnp.ndarray
+    chips: jnp.ndarray
+    packages: jnp.ndarray
+    d2d: jnp.ndarray
+
+    @property
+    def total(self):
+        return self.modules + self.chips + self.packages + self.d2d
+
+    def as_dict(self) -> Dict[str, jnp.ndarray]:
+        return {"nre_modules": self.modules, "nre_chips": self.chips,
+                "nre_packages": self.packages, "nre_d2d": self.d2d,
+                "nre_total": self.total}
+
+
+def _nre_impl(b: SystemBatch) -> NREBreakdown:
+    TRACE_COUNTS["nre"] += 1
+    q = b.quantity
+    n_sys = b.chip_area.shape[0]
+
+    # Chip designs: per-use share = NRE_e / sum_j q_j * n_{j,e}  (Eq. 8).
+    chip_nre = b.chip_entity_k * b.chip_entity_area + b.chip_entity_fixed
+    flat_id = b.chip_entity_id.reshape(-1)
+    flat_q = (q[:, None] * b.chip_mask).reshape(-1)
+    denom = jax.ops.segment_sum(flat_q, flat_id,
+                                num_segments=b.chip_entity_area.shape[0])
+    share = chip_nre / jnp.maximum(denom, _EPS)
+    chips = (share[b.chip_entity_id] * b.chip_mask).sum(-1)
+
+    # Package designs (one instance per system).
+    pkg_nre = b.pkg_entity_k * b.pkg_entity_area + b.pkg_entity_fixed
+    pdenom = jax.ops.segment_sum(q, b.pkg_entity_id,
+                                 num_segments=b.pkg_entity_area.shape[0])
+    packages = (pkg_nre / jnp.maximum(pdenom, _EPS))[b.pkg_entity_id]
+
+    # Modules (Eq. 7) and D2D interfaces: flat instance lists.
+    if b.mod_sys.shape[0]:
+        mod_nre = b.mod_entity_k * b.mod_entity_area
+        mdenom = jax.ops.segment_sum(q[b.mod_sys], b.mod_entity,
+                                     num_segments=b.mod_entity_area.shape[0])
+        per_inst = (mod_nre / jnp.maximum(mdenom, _EPS))[b.mod_entity]
+        modules = jax.ops.segment_sum(per_inst, b.mod_sys,
+                                      num_segments=n_sys)
+    else:
+        modules = jnp.zeros((n_sys,), q.dtype)
+    if b.d2d_sys.shape[0]:
+        ddenom = jax.ops.segment_sum(q[b.d2d_sys], b.d2d_entity,
+                                     num_segments=b.d2d_entity_nre.shape[0])
+        per_inst = (b.d2d_entity_nre / jnp.maximum(ddenom, _EPS))[b.d2d_entity]
+        d2d = jax.ops.segment_sum(per_inst, b.d2d_sys, num_segments=n_sys)
+    else:
+        d2d = jnp.zeros((n_sys,), q.dtype)
+    return NREBreakdown(modules=modules, chips=chips, packages=packages,
+                        d2d=d2d)
+
+
+@dataclasses.dataclass
+class TotalCost:
+    """RE + amortized NRE for a batch; all fields array-valued."""
+
+    re: REBreakdown
+    nre: NREBreakdown
+
+    @property
+    def total(self):
+        return self.re.total + self.nre.total
+
+
+def _total_impl(b: SystemBatch, flow: str) -> TotalCost:
+    TRACE_COUNTS["total"] += 1
+    return TotalCost(re=_re_impl(b, flow), nre=_nre_impl(b))
+
+
+def _register(cls, fields: Tuple[str, ...]):
+    jax.tree_util.register_pytree_node(
+        cls,
+        lambda x: (tuple(getattr(x, f) for f in fields), None),
+        lambda _, ch: cls(*ch))
+
+
+_register(REBreakdown, ("raw_chips", "chip_defects", "raw_package",
+                        "package_defects", "wasted_kgd"))
+_register(NREBreakdown, ("modules", "chips", "packages", "d2d"))
+_register(TotalCost, ("re", "nre"))
+
+# Module-level jitted entry points so every CostEngine instance shares one
+# compilation cache (same batch shapes => exactly one trace).
+_RE_JIT = jax.jit(_re_impl, static_argnames=("flow",))
+_NRE_JIT = jax.jit(_nre_impl)
+_TOTAL_JIT = jax.jit(_total_impl, static_argnames=("flow",))
+
+
+def re_split_relaxed(module_area_mm2, n_chiplets, *, wafer_cost,
+                     defect_density, cluster, tech_params, wafer_yield=0.99,
+                     sort_cost=0.0, bump_cost=0.0, d2d_overhead=None,
+                     interposer_cluster=3.0, flow: str = "chip-last"):
+    """Continuous-relaxation RE total for an even n-way split.
+
+    ``n_chiplets`` may be a traced float — this is the differentiable
+    kernel behind :func:`repro.core.gradient.optimize_chiplet_count`.
+    Built from the same primitives as :class:`CostEngine` (one source of
+    truth: real wafer yield, sort/bump folded in, Eq. 4/5 flow terms);
+    the old standalone ``re_cost_split`` math is gone.  Returns a dict of
+    jnp scalars matching ``REBreakdown`` fields plus ``total``.
+    """
+    t = tech_params
+    ovh = t.d2d_area_overhead if d2d_overhead is None else d2d_overhead
+    n = jnp.asarray(n_chiplets, jnp.float32)
+    chip_area = module_area_mm2 / n
+    is_multi = n > 1.0
+    chip_area = chip_area * jnp.where(is_multi, 1.0 / (1.0 - ovh), 1.0)
+    silicon = chip_area * n
+
+    raw1, defect1, kgd1, _ = silicon_unit_costs(
+        chip_area, wafer_cost, defect_density, cluster, wafer_yield,
+        sort_cost, bump_cost)
+    raw_chips = raw1 * n
+    chip_defects = defect1 * n
+    kgd_total = kgd1 * n
+
+    interposer_area = silicon * t.interposer_area_factor
+    c_interposer = interposer_area * t.interposer_cost_per_mm2
+    y1 = jnp.where(
+        t.interposer_area_factor > 0,
+        yield_negative_binomial(interposer_area, t.interposer_defect_density,
+                                interposer_cluster),
+        1.0)
+    c_substrate = (silicon * t.package_area_factor * t.substrate_cost_per_mm2
+                   * t.substrate_layer_factor)
+    c_bond = t.bond_cost_per_chip * n
+    y2n = t.y2_chip_bond ** n
+    y3 = t.y3_substrate_bond * t.assembly_yield
+
+    raw_package, package_defects, wasted_kgd = package_flow_terms(
+        flow, c_interposer=c_interposer, y1=y1, c_substrate=c_substrate,
+        c_bond=c_bond, kgd_total=kgd_total, y2n=y2n, y3=y3)
+    total = (raw_chips + chip_defects + raw_package + package_defects
+             + wasted_kgd)
+    return {"raw_chips": raw_chips, "chip_defects": chip_defects,
+            "raw_package": raw_package, "package_defects": package_defects,
+            "wasted_kgd": wasted_kgd, "total": total}
+
+
+class CostEngine:
+    """Single entry point for the batched cost model.
+
+    >>> batch = SystemBatch.from_specs([
+    ...     {"kind": "soc", "area": 800.0, "process": "5nm"},
+    ...     {"kind": "split", "area": 800.0, "process": "5nm", "n": 3,
+    ...      "integration": "MCM"},
+    ... ])
+    >>> engine = CostEngine()
+    >>> engine.re(batch).total          # (2,) RE totals
+    >>> engine.total(batch).total       # (2,) RE + amortized NRE
+
+    All methods are jit-compiled over the whole batch; pass ``jit=False``
+    to run the un-jitted implementation (e.g. under an outer ``grad``
+    with replaced traced leaves).
+    """
+
+    def __init__(self, flow: str = "chip-last"):
+        self.flow = flow
+
+    def re(self, batch: SystemBatch, flow: str = None,
+           jit: bool = True) -> REBreakdown:
+        """Itemized RE breakdown, Eqs. (4)-(5); fields are (N,) arrays."""
+        f = self.flow if flow is None else flow
+        return (_RE_JIT if jit else _re_impl)(batch, f)
+
+    def nre(self, batch: SystemBatch, jit: bool = True) -> NREBreakdown:
+        """Per-unit amortized NRE with entity dedup, Eqs. (6)-(8)."""
+        return (_NRE_JIT if jit else _nre_impl)(batch)
+
+    def total(self, batch: SystemBatch, flow: str = None,
+              jit: bool = True) -> TotalCost:
+        """RE + amortized NRE per unit for every system in the batch."""
+        f = self.flow if flow is None else flow
+        return (_TOTAL_JIT if jit else _total_impl)(batch, f)
+
+    def as_rows(self, batch: SystemBatch, flow: str = None) -> List[Dict]:
+        """Host-side list of per-system dicts (benchmark/report helper)."""
+        tc = jax.device_get(self.total(batch, flow=flow))
+        # names are dropped by tree transforms (they're not pytree data);
+        # fall back to positional labels rather than emitting zero rows
+        names = batch.names or tuple(f"sys{i}" for i in range(len(batch)))
+        rows = []
+        for i, name in enumerate(names):
+            row = {"system": name}
+            row.update({k: float(v[i]) for k, v in tc.re.as_dict().items()
+                        if k != "total"})
+            row["re_total"] = float(tc.re.total[i])
+            row.update({k: float(v[i]) for k, v in tc.nre.as_dict().items()})
+            row["total"] = float(tc.total[i])
+            rows.append(row)
+        return rows
+
+    @staticmethod
+    def trace_counts() -> Dict[str, int]:
+        """How many times each implementation has been (re)traced."""
+        return dict(TRACE_COUNTS)

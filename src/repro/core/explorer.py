@@ -1,21 +1,27 @@
 """Vectorized design-space exploration over the Chiplet Actuary model.
 
-``vmap``-based sweeps over (module area x chiplet count x technology x
-node) grids — the engine behind the Fig. 2/4 benchmarks and the
-partitioning decision method (Sec. 6 takeaway 1: "splitting into two or
-three chiplets is usually sufficient").
+Sweeps are expressed as declarative spec dicts, packed into one
+:class:`~repro.core.batch.SystemBatch`, and priced by the jitted
+:class:`~repro.core.engine.CostEngine` in a single trace — the engine
+behind the Fig. 2/4 benchmarks and the partitioning decision method
+(Sec. 6 takeaway 1: "splitting into two or three chiplets is usually
+sufficient").  Unlike the old ``re_cost_split``-based sweeps, these cover
+*heterogeneous* partitions: unequal slices, mixed process nodes, mixed
+integration technologies, all in one batch.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Sequence
+from typing import Dict, List, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from .re_cost import re_cost_split
+from .batch import SystemBatch
+from .engine import CostEngine
 from .technology import PROCESS_NODES, node, tech
 from .yield_model import raw_die_cost, yield_negative_binomial
+
+_ENGINE = CostEngine()
 
 
 def cost_area_curve(process: str, areas_mm2: jnp.ndarray, early: bool = False):
@@ -34,32 +40,70 @@ def cost_area_curve(process: str, areas_mm2: jnp.ndarray, early: bool = False):
     return {"area": areas_mm2, "yield": y, "norm_cost_per_area": norm_cost}
 
 
-import functools
+def sweep_specs(specs: Sequence[Mapping], flow: str = "chip-last",
+                share_nre: bool = False):
+    """Price arbitrary spec dicts in one engine trace.
 
-
-@functools.partial(jax.jit, static_argnames=("tech_arrays",))
-def _split_totals(areas, ns, wafer_cost, d0, cluster, tech_arrays):
-    """(A, N) grid of split totals; tech params passed as scalars."""
-    def one(area):
-        def per_n(n):
-            return re_cost_split(area, n, wafer_cost=wafer_cost,
-                                 defect_density=d0, cluster=cluster,
-                                 tech_params=tech_arrays)["total"]
-        return jax.vmap(per_n)(ns)
-    return jax.vmap(one)(areas)
+    Returns ``(batch, total_cost)`` where ``total_cost`` is the engine's
+    :class:`~repro.core.engine.TotalCost` with (N,)-array fields.
+    """
+    batch = SystemBatch.from_specs(specs, share_nre=share_nre)
+    return batch, _ENGINE.total(batch, flow=flow)
 
 
 def sweep_partitions(process: str, integration: str,
                      areas_mm2: Sequence[float],
-                     n_chiplets: Sequence[int], early: bool = False):
-    """RE-cost surface over (module area x number of chiplets) — Fig. 4 data."""
-    n = node(process)
-    t = tech(integration)
-    d0 = n.defect_density_early if early else n.defect_density
-    areas = jnp.asarray(areas_mm2, jnp.float32)
-    ns = jnp.asarray(n_chiplets, jnp.float32)
-    totals = _split_totals(areas, ns, n.wafer_cost, d0, n.cluster_param, t)
-    return {"areas": areas, "n_chiplets": ns, "total": totals}
+                     n_chiplets: Sequence[int], early: bool = False,
+                     flow: str = "chip-last"):
+    """RE-cost surface over (module area x number of chiplets) — Fig. 4 data.
+
+    ``n = 1`` means the unsplit module (no D2D overhead) placed in the
+    given integration technology's package.
+    """
+    specs = []
+    for a in areas_mm2:
+        for n in n_chiplets:
+            specs.append({
+                "kind": "split", "area": float(a), "process": process,
+                "n": int(n), "integration": integration, "early": early,
+                "d2d_overhead": 0.0 if int(n) == 1 else None,
+            })
+    batch = SystemBatch.from_specs(specs)
+    totals = _ENGINE.re(batch, flow=flow).total.reshape(
+        len(areas_mm2), len(n_chiplets))
+    return {"areas": jnp.asarray(areas_mm2, jnp.float32),
+            "n_chiplets": jnp.asarray(n_chiplets, jnp.float32),
+            "total": totals}
+
+
+def sweep_hetero_partitions(area_mm2: float, partitions: Sequence[Sequence],
+                            integration: str, early: bool = False,
+                            flow: str = "chip-last") -> List[Dict]:
+    """Price heterogeneous partitions of one module area.
+
+    Each partition is a sequence of ``(fraction, process)`` slices — e.g.
+    ``[(0.5, "5nm"), (0.25, "7nm"), (0.25, "7nm")]`` puts half the module
+    on 5nm and the rest on two 7nm chiplets.  Fractions are normalized.
+    Returns one row per partition with the RE breakdown.
+    """
+    specs = []
+    for i, part in enumerate(partitions):
+        fracs = [float(f) for f, _ in part]
+        procs = [p for _, p in part]
+        specs.append({"kind": "split", "name": f"part{i}",
+                      "area": float(area_mm2), "fractions": fracs,
+                      "processes": procs, "integration": integration,
+                      "early": early,
+                      # a single-slice partition is the unsplit module
+                      "d2d_overhead": 0.0 if len(part) == 1 else None})
+    batch = SystemBatch.from_specs(specs)
+    br = jax.device_get(_ENGINE.re(batch, flow=flow))
+    rows = []
+    for i, part in enumerate(partitions):
+        rows.append({"partition": list(part), "total": float(br.total[i]),
+                     "die_cost": float(br.die_cost[i]),
+                     "packaging_cost": float(br.packaging_cost[i])})
+    return rows
 
 
 def best_partition(process: str, integration: str, area_mm2: float,
@@ -75,7 +119,15 @@ def best_partition(process: str, integration: str, area_mm2: float,
 
 
 def pareto_front(points: Sequence[Dict], x_key: str, y_key: str) -> List[Dict]:
-    """Lower-left Pareto front (minimize both keys)."""
+    """Lower-left Pareto front (minimize both keys), deterministically.
+
+    Points are sorted by ``(x, y)`` (stable, so equal keys keep input
+    order) and a point is kept iff its y is *strictly* below every
+    previously kept point's y.  Consequences of the strict ``<``: the
+    first point of an equal-``(x, y)`` duplicate group wins, and a
+    y-tie at larger x is treated as dominated and dropped — ties never
+    produce a nondeterministic front.
+    """
     pts = sorted(points, key=lambda p: (p[x_key], p[y_key]))
     front, best_y = [], float("inf")
     for p in pts:

@@ -4,8 +4,14 @@ The paper sweeps integer chiplet counts; here we exploit the JAX
 implementation to *differentiate* the RE model and gradient-descend on
 
   * a continuous relaxation of the chiplet count ``n`` (rounded at the end),
-  * uneven split fractions (softmax-parameterized), useful when modules
-    have different yield sensitivity (heterogeneous defect densities).
+    via :func:`repro.core.engine.re_split_relaxed` — the same primitives the
+    batched :class:`~repro.core.engine.CostEngine` uses, so the relaxed
+    objective and the faithful model share one source of truth (real wafer
+    yield, sort/bump costs, Eq. 4/5 flow terms);
+  * uneven split fractions (softmax-parameterized) optimized against the
+    *full* engine RE objective by swapping traced chip areas into a
+    :class:`~repro.core.batch.SystemBatch` template — heterogeneous
+    partitions, not just even splits.
 
 This is an extension, clearly separated from the faithful model: the
 faithful integer sweep (explorer.best_partition) is always reported next
@@ -14,13 +20,17 @@ to the relaxed optimum in the benchmarks.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from .re_cost import re_cost_split
+from .batch import SystemBatch
+from .engine import CostEngine, _re_impl, re_split_relaxed
+from .system import spec
 from .technology import node, tech
+
+_ENGINE = CostEngine()
 
 
 @dataclasses.dataclass
@@ -33,9 +43,13 @@ class PartitionResult:
     iterations: int
 
 
-def _total(n, area, wafer_cost, d0, cluster, t):
-    return re_cost_split(area, n, wafer_cost=wafer_cost, defect_density=d0,
-                         cluster=cluster, tech_params=t)["total"]
+def _total(n, area, nd, d0, t):
+    return re_split_relaxed(
+        area, n, wafer_cost=nd.wafer_cost, defect_density=d0,
+        cluster=nd.cluster_param, tech_params=t,
+        wafer_yield=nd.wafer_yield, sort_cost=nd.wafer_sort_cost,
+        bump_cost=nd.bump_cost_per_mm2,
+        interposer_cluster=node(t.interposer_node).cluster_param)["total"]
 
 
 def optimize_chiplet_count(process: str, integration: str, area_mm2: float,
@@ -46,14 +60,13 @@ def optimize_chiplet_count(process: str, integration: str, area_mm2: float,
     t = tech(integration)
     d0 = nd.defect_density_early if early else nd.defect_density
 
-    soc_cost = _total(1.0, area_mm2, nd.wafer_cost, d0, nd.cluster_param, t)
+    soc_cost = _total(1.0, area_mm2, nd, d0, t)
 
     def loss(log_n):
         n = jnp.exp(log_n) + 1.0  # n >= 1
         # normalized: O(1) gradients for any node/area (raw $ costs give
         # log-space SGD steps of ~e^80 and the descent diverges)
-        return _total(n, area_mm2, nd.wafer_cost, d0, nd.cluster_param,
-                      t) / soc_cost
+        return _total(n, area_mm2, nd, d0, t) / soc_cost
 
     grad = jax.jit(jax.grad(loss))
     val = jax.jit(lambda ln: loss(ln) * soc_cost)
@@ -64,50 +77,50 @@ def optimize_chiplet_count(process: str, integration: str, area_mm2: float,
     n_rel = float(jnp.exp(log_n) + 1.0)
     n_round = max(1, int(round(n_rel)))
     cost_rel = float(val(log_n))
-    cost_round = float(_total(float(n_round), area_mm2, nd.wafer_cost, d0,
-                              nd.cluster_param, t))
-    cost_soc = float(_total(1.0, area_mm2, nd.wafer_cost, d0,
-                            nd.cluster_param, t))
+    cost_round = float(_total(float(n_round), area_mm2, nd, d0, t))
+    cost_soc = float(_total(1.0, area_mm2, nd, d0, t))
     return PartitionResult(n_relaxed=n_rel, n_rounded=n_round,
                            cost_relaxed=cost_rel, cost_rounded=cost_round,
                            cost_soc=cost_soc, iterations=steps)
 
 
 def optimize_uneven_split(process: str, integration: str,
-                          module_areas_mm2, n_chiplets: int,
-                          early: bool = False, lr: float = 0.1,
-                          steps: int = 500) -> Dict:
+                          module_areas_mm2: Sequence[float],
+                          n_chiplets: int, early: bool = False,
+                          lr: float = 0.1, steps: int = 500) -> Dict:
     """Assign m modules to n chiplets via a relaxed (softmax) assignment.
 
-    Minimizes the sum of per-chiplet good-die costs + packaging; returns
-    the hard assignment recovered by argmax.  Modules are treated as
-    divisible during optimization (a common relaxation); the reported hard
-    cost re-evaluates the rounded assignment faithfully.
+    The soft assignment induces (traced) chip areas that are swapped into
+    a :class:`SystemBatch` template and priced by the *full* engine RE
+    model — interposer, bonding, defect and wasted-KGD terms included,
+    unlike the old approximate objective.  Returns the hard assignment
+    recovered by argmax plus its faithfully re-evaluated cost.
     """
-    from .yield_model import raw_die_cost, yield_negative_binomial
-
     nd = node(process)
     t = tech(integration)
-    d0 = nd.defect_density_early if early else nd.defect_density
     areas = jnp.asarray(module_areas_mm2, jnp.float32)
     m = areas.shape[0]
     ovh = t.d2d_area_overhead
+    total_area = float(areas.sum())
 
-    def chip_cost(chip_area):
-        a = chip_area / (1.0 - ovh)
-        y = yield_negative_binomial(a, d0, nd.cluster_param) * 0.99
-        return raw_die_cost(a, nd.wafer_cost) / y
+    # Template: even n-way split of the right total; its chip_area /
+    # package_area leaves are replaced by traced values during descent.
+    template = SystemBatch.from_systems([spec({
+        "kind": "split", "name": "uneven", "area": total_area,
+        "process": process, "n": n_chiplets, "integration": integration,
+        "early": early})])
+
+    def re_total(chip_areas):
+        silicon = chip_areas.sum()
+        batch = template.replace(
+            chip_area=chip_areas[None, :],
+            package_area=(silicon * t.package_area_factor)[None])
+        return _re_impl(batch, "chip-last").total[0]
 
     def loss(logits):
         p = jax.nn.softmax(logits, axis=1)          # (m, n) soft assignment
-        chip_areas = p.T @ areas                    # (n,)
-        sil = chip_areas.sum() / (1.0 - ovh)
-        pkg = (sil * t.package_area_factor * t.substrate_cost_per_mm2
-               * t.substrate_layer_factor)
-        y2n = t.y2_chip_bond ** n_chiplets
-        y3 = t.y3_substrate_bond * t.assembly_yield
-        dies = jax.vmap(chip_cost)(chip_areas).sum()
-        return dies / (y2n * y3) + pkg / y3
+        chip_areas = (p.T @ areas) / (1.0 - ovh)    # + D2D share per chiplet
+        return re_total(chip_areas)
 
     grad = jax.jit(jax.grad(loss))
     val = jax.jit(loss)
@@ -117,5 +130,12 @@ def optimize_uneven_split(process: str, integration: str,
         logits = logits - lr * grad(logits)
     hard = jax.device_get(jnp.argmax(logits, axis=1))
     chip_areas = [float(areas[hard == i].sum()) for i in range(n_chiplets)]
+    occupied = [a for a in chip_areas if a > 0.0]
+    hard_batch = SystemBatch.from_systems([spec({
+        "kind": "chips", "name": "uneven_hard",
+        "chips": [{"area": a, "process": process, "early": early}
+                  for a in occupied],
+        "integration": integration})])
+    hard_cost = float(_ENGINE.re(hard_batch).total[0])
     return {"assignment": hard.tolist(), "chip_areas": chip_areas,
-            "soft_cost": float(val(logits))}
+            "soft_cost": float(val(logits)), "hard_cost": hard_cost}

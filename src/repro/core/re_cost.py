@@ -20,8 +20,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional
 
-import jax.numpy as jnp
-
 from .system import Chip, System
 from .technology import IntegrationTech, node, tech
 from .yield_model import (dies_per_wafer, raw_die_cost,
@@ -165,55 +163,32 @@ def re_cost(system: System, flow: str = "chip-last") -> REBreakdown:
 
 
 # ---------------------------------------------------------------------------
-# Functional (jnp, vmap-able) kernel for homogeneous splits — used by the
-# explorer and the differentiable partitioner.  Mirrors re_cost() for the
-# `split_system` case: `module_area` split into n chiplets with D2D overhead.
+# Deprecated shim — the old homogeneous-even-split jnp kernel.  Its math now
+# lives in engine.re_split_relaxed (shared primitives with CostEngine), which
+# also fixed the hardcoded 0.99 wafer yield: pass the node's real value.
 # ---------------------------------------------------------------------------
 
 
 def re_cost_split(module_area_mm2, n_chiplets, *, wafer_cost, defect_density,
-                  cluster, tech_params, d2d_overhead=None):
-    """jnp RE total for an even n-way split; differentiable in areas.
+                  cluster, tech_params, d2d_overhead=None, wafer_yield=0.99):
+    """Deprecated: use :class:`repro.core.engine.CostEngine` on a
+    :class:`repro.core.batch.SystemBatch` (heterogeneous, batched), or
+    :func:`repro.core.engine.re_split_relaxed` for the continuous-n
+    relaxation.
 
-    ``tech_params`` is an :class:`IntegrationTech`; n_chiplets may be a
-    traced float (the differentiable relaxation treats it continuously).
-    Returns a dict of jnp scalars matching REBreakdown fields.
+    Kept as a thin wrapper for backward compatibility; ``wafer_yield``
+    (previously hardcoded to 0.99) is now a parameter so callers can
+    thread the per-node value.
     """
-    t = tech_params
-    ovh = t.d2d_area_overhead if d2d_overhead is None else d2d_overhead
-    n = n_chiplets
-    chip_area = module_area_mm2 / n
-    is_multi = jnp.asarray(n, jnp.float32) > 1.0
-    chip_area = chip_area * jnp.where(is_multi, 1.0 / (1.0 - ovh), 1.0)
-    silicon = chip_area * n
+    import warnings
 
-    raw1 = raw_die_cost(chip_area, wafer_cost)
-    y_die = yield_negative_binomial(chip_area, defect_density, cluster) * 0.99
-    raw_chips = raw1 * n
-    chip_defects = raw1 * (1.0 / y_die - 1.0) * n
-    kgd = raw1 / y_die * n
+    from .engine import re_split_relaxed
 
-    interposer_area = silicon * t.interposer_area_factor
-    c_interposer = interposer_area * t.interposer_cost_per_mm2
-    y1 = jnp.where(
-        t.interposer_area_factor > 0,
-        yield_negative_binomial(interposer_area, t.interposer_defect_density, cluster),
-        1.0)
-    c_substrate = (silicon * t.package_area_factor * t.substrate_cost_per_mm2
-                   * t.substrate_layer_factor)
-    c_bond = t.bond_cost_per_chip * n
-
-    y2n = t.y2_chip_bond ** n
-    y3 = t.y3_substrate_bond * t.assembly_yield
-
-    raw_package = c_interposer + c_substrate + c_bond
-    package_defects = (c_interposer * (1.0 / (y1 * y2n * y3) - 1.0)
-                       + (c_substrate + c_bond) * (1.0 / y3 - 1.0))
-    wasted_kgd = kgd * (1.0 / (y2n * y3) - 1.0)
-
-    total = raw_chips + chip_defects + raw_package + package_defects + wasted_kgd
-    return {
-        "raw_chips": raw_chips, "chip_defects": chip_defects,
-        "raw_package": raw_package, "package_defects": package_defects,
-        "wasted_kgd": wasted_kgd, "total": total,
-    }
+    warnings.warn(
+        "re_cost_split is deprecated; use CostEngine on a SystemBatch or "
+        "engine.re_split_relaxed", DeprecationWarning, stacklevel=2)
+    return re_split_relaxed(
+        module_area_mm2, n_chiplets, wafer_cost=wafer_cost,
+        defect_density=defect_density, cluster=cluster,
+        tech_params=tech_params, wafer_yield=wafer_yield,
+        interposer_cluster=cluster, d2d_overhead=d2d_overhead)

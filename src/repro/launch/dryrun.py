@@ -91,6 +91,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     eff = cfg.replace(**overrides) if overrides else cfg
     mem = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):      # older jax: one dict per computation
+        ca = ca[0] if ca else {}
     text = compiled.as_text()
     rep = analyze_hlo_text(text, score_chunks=(eff.attn_chunk,
                                                eff.ssm_chunk))

@@ -3,6 +3,7 @@ import math
 
 import jax.numpy as jnp
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep, see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (amortized_costs, dies_per_wafer, re_cost,
