@@ -8,7 +8,7 @@ import time
 
 
 def main() -> None:
-    from . import (ablations, codesign, fig2_yield_cost,
+    from . import (ablations, codesign, dse_bench, fig2_yield_cost,
                    fig4_re_integration, fig5_amd, fig6_single_system,
                    fig8_scms, fig9_ocme, fig10_fsmc, kernels_bench,
                    roofline)
@@ -19,7 +19,7 @@ def main() -> None:
         ("fig8", fig8_scms), ("fig9", fig9_ocme), ("fig10", fig10_fsmc),
         ("ablations", ablations),
         ("roofline", roofline), ("codesign", codesign),
-        ("kernels", kernels_bench),
+        ("kernels", kernels_bench), ("dse", dse_bench),
     ]
     failures = 0
     for name, mod in benches:

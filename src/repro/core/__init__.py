@@ -26,13 +26,14 @@ from .yield_model import (dies_per_wafer, good_die_cost, raw_die_cost,
                           yield_murphy, yield_negative_binomial, yield_poisson)
 from .system import (Chip, Module, System, d2d_module, make_chip, soc_system,
                      spec, split_system)
-from .batch import SystemBatch
+from .batch import SystemBatch, pad_batch
 from .engine import (CostEngine, NREBreakdown, TotalCost, package_flow_terms,
                      re_split_relaxed, silicon_unit_costs)
 from .re_cost import REBreakdown, chip_costs, re_cost, re_cost_split
 from .nre_cost import NREEntities, UnitCost, amortized_costs, group_nre
 from .reuse import (fsmc_enumerate, fsmc_num_systems, fsmc_situations,
-                    ocme_soc_equivalents, ocme_systems, scms_soc_equivalents,
+                    ocme_soc_equivalents, ocme_systems,
+                    portfolio_reuse_systems, scms_soc_equivalents,
                     scms_systems)
 from .explorer import (best_partition, cost_area_curve, pareto_front,
                        sweep_hetero_partitions, sweep_partitions, sweep_specs)
@@ -44,12 +45,14 @@ __all__ = [
     "node", "tech", "dies_per_wafer", "good_die_cost", "raw_die_cost",
     "yield_murphy", "yield_negative_binomial", "yield_poisson", "Chip",
     "Module", "System", "d2d_module", "make_chip", "soc_system", "spec",
-    "split_system", "SystemBatch", "CostEngine", "NREBreakdown", "TotalCost",
+    "split_system", "SystemBatch", "pad_batch", "CostEngine", "NREBreakdown",
+    "TotalCost",
     "package_flow_terms", "re_split_relaxed", "silicon_unit_costs",
     "REBreakdown", "chip_costs", "re_cost", "re_cost_split",
     "NREEntities", "UnitCost", "amortized_costs", "group_nre",
     "fsmc_enumerate", "fsmc_num_systems", "fsmc_situations",
-    "ocme_soc_equivalents", "ocme_systems", "scms_soc_equivalents",
+    "ocme_soc_equivalents", "ocme_systems", "portfolio_reuse_systems",
+    "scms_soc_equivalents",
     "scms_systems", "best_partition", "cost_area_curve", "pareto_front",
     "sweep_hetero_partitions", "sweep_partitions", "sweep_specs",
     "AcceleratorSpec", "accelerator_systems", "cost_per_step",

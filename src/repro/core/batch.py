@@ -26,12 +26,21 @@ entity de-duplication runs in-graph via segment sums:
 ``share_nre=True`` (default) treats the batch as one co-produced group,
 matching ``nre_cost.amortized_costs(systems)``; ``share_nre=False`` prices
 every system as its own group (entity keys namespaced per system), which
-is what independent design-point sweeps want.
+is what independent design-point sweeps want.  ``share_nre`` may also be a
+sequence of integer group ids, one per system: entities are then shared
+*within* a group but never across groups — the representation
+``repro.dse`` uses to price many candidate portfolios (each amortizing
+NRE internally) in one batch.
+
+:func:`pad_batch` pads every axis of a built batch (systems, chip slots,
+entity tables, instance lists) with cost-neutral rows so arbitrarily
+sized work can be evaluated through constant-shape chunks under a single
+retained jit trace.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -136,22 +145,37 @@ class SystemBatch:
     @classmethod
     def from_systems(cls, systems: Sequence[System],
                      max_chips: Optional[int] = None,
-                     share_nre: bool = True) -> "SystemBatch":
+                     share_nre: Union[bool, Sequence[int]] = True,
+                     ) -> "SystemBatch":
         """Pack :class:`System` objects into one batch.
 
         ``share_nre=True`` amortizes design entities across the whole batch
         (the batch is one product group, as in ``amortized_costs``) and
         therefore requires unique system names; ``share_nre=False`` prices
-        each system as a standalone group.
+        each system as a standalone group.  A sequence of integer group
+        ids (one per system) shares entities within each group only —
+        names must be unique within a group.
         """
         systems = list(systems)
         if not systems:
             raise ValueError("empty system batch")
-        if share_nre:
-            names = [s.name for s in systems]
+        if isinstance(share_nre, bool):
+            groups = [0] * len(systems) if share_nre \
+                else list(range(len(systems)))
+        else:
+            groups = [int(g) for g in share_nre]
+            if len(groups) != len(systems):
+                raise ValueError(
+                    f"share_nre groups ({len(groups)}) != systems "
+                    f"({len(systems)})")
+        by_group: Dict[int, List[str]] = {}
+        for s, g in zip(systems, groups):
+            by_group.setdefault(g, []).append(s.name)
+        for g, names in by_group.items():
             if len(set(names)) != len(names):
                 raise ValueError(
-                    "system names must be unique within a shared-NRE batch")
+                    "system names must be unique within a shared-NRE "
+                    f"group (group {g})")
         n = len(systems)
         c = max(s.n_chips for s in systems)
         if max_chips is not None:
@@ -194,7 +218,7 @@ class SystemBatch:
 
         for i, s in enumerate(systems):
             t = s.tech
-            ns = "" if share_nre else f"#{i}/"
+            ns = f"#{groups[i]}/"
             sysf["package_area"][i] = s.package_area
             sysf["package_area_factor"][i] = t.package_area_factor
             sysf["substrate_cost"][i] = t.substrate_cost_per_mm2
@@ -286,7 +310,8 @@ class SystemBatch:
     @classmethod
     def from_specs(cls, specs: Sequence[Mapping],
                    max_chips: Optional[int] = None,
-                   share_nre: bool = False) -> "SystemBatch":
+                   share_nre: Union[bool, Sequence[int]] = False,
+                   ) -> "SystemBatch":
         """Build a batch straight from declarative spec dicts.
 
         Specs without a ``name`` get a unique positional one.  Defaults to
@@ -305,3 +330,128 @@ class SystemBatch:
 SystemBatch._LEAVES = tuple(
     fld.name for fld in dataclasses.fields(SystemBatch)
     if fld.name != "names")
+
+
+# ---------------------------------------------------------------------------
+# Constant-shape padding — the enabler of chunked evaluation (repro.dse).
+# ---------------------------------------------------------------------------
+
+# Leaves whose cost-neutral padding value is 1.0, not 0.0 (yields and
+# divisors that must stay benign for padded rows).
+_PAD_ONE = frozenset({
+    "chip_wafer_yield", "chip_cluster", "package_area_factor",
+    "y2_chip_bond", "y3_substrate_bond", "assembly_yield",
+    "interposer_cluster",
+})
+
+
+def pad_batch(b: SystemBatch, *, n_systems: Optional[int] = None,
+              max_chips: Optional[int] = None,
+              chip_entities: Optional[int] = None,
+              pkg_entities: Optional[int] = None,
+              mod_entities: Optional[int] = None,
+              mod_instances: Optional[int] = None,
+              d2d_entities: Optional[int] = None,
+              d2d_instances: Optional[int] = None) -> SystemBatch:
+    """Pad every axis of ``b`` to the requested sizes with cost-neutral rows.
+
+    Padded systems have zero area, zero quantity and unit yields, so they
+    price to zero RE and contribute nothing to any NRE amortization
+    denominator (Eq. 6-8 shares of real systems are unchanged — pinned by
+    ``tests/test_dse.py``).  Padded entity rows carry zero NRE; padded
+    module/D2D instances point at a padded (zero) entity row, or at a
+    padded (zero-quantity) system when no entity row was added.  Padding
+    only ever grows an axis; shrinking raises ``ValueError``.
+
+    The point: two batches padded to the same signature share one
+    compiled :class:`~repro.core.engine.CostEngine` trace, which is how
+    ``repro.dse.evaluate`` prices unbounded candidate streams through
+    constant-shape chunks without retracing.
+    """
+    n0, c0 = b.chip_area.shape
+    ec0 = b.chip_entity_area.shape[0]
+    ep0 = b.pkg_entity_area.shape[0]
+    em0 = b.mod_entity_area.shape[0]
+    m0 = b.mod_sys.shape[0]
+    ed0 = b.d2d_entity_nre.shape[0]
+    d0 = b.d2d_sys.shape[0]
+    tgt = {
+        "n_systems": (n0, n0 if n_systems is None else int(n_systems)),
+        "max_chips": (c0, c0 if max_chips is None else int(max_chips)),
+        "chip_entities": (ec0, ec0 if chip_entities is None
+                          else int(chip_entities)),
+        "pkg_entities": (ep0, ep0 if pkg_entities is None
+                         else int(pkg_entities)),
+        "mod_entities": (em0, em0 if mod_entities is None
+                         else int(mod_entities)),
+        "mod_instances": (m0, m0 if mod_instances is None
+                          else int(mod_instances)),
+        "d2d_entities": (ed0, ed0 if d2d_entities is None
+                         else int(d2d_entities)),
+        "d2d_instances": (d0, d0 if d2d_instances is None
+                          else int(d2d_instances)),
+    }
+    for k, (cur, want) in tgt.items():
+        if want < cur:
+            raise ValueError(f"pad_batch cannot shrink {k}: {cur} -> {want}")
+    n1, c1 = tgt["n_systems"][1], tgt["max_chips"][1]
+    ec1, ep1 = tgt["chip_entities"][1], tgt["pkg_entities"][1]
+    em1, m1 = tgt["mod_entities"][1], tgt["mod_instances"][1]
+    ed1, d1 = tgt["d2d_entities"][1], tgt["d2d_instances"][1]
+
+    # A padded instance must park its NRE share somewhere harmless: a
+    # padded zero-NRE entity row, else a padded zero-quantity system.
+    if (m1 > m0 and em1 == em0 and n1 == n0) or \
+       (d1 > d0 and ed1 == ed0 and n1 == n0):
+        raise ValueError(
+            "padding instances requires a padded entity row or a padded "
+            "system to absorb them")
+
+    def _np(x):
+        return np.asarray(jax.device_get(x))
+
+    def pad1(x, size, value=0.0):
+        a = _np(x)
+        return np.pad(a, (0, size - a.shape[0]), constant_values=value)
+
+    def pad2(x, value=0.0):
+        a = _np(x)
+        return np.pad(a, ((0, n1 - n0), (0, c1 - c0)),
+                      constant_values=value)
+
+    out = {}
+    for f in SystemBatch._LEAVES:
+        a = getattr(b, f)
+        val = 1.0 if f in _PAD_ONE else 0.0
+        if f == "chip_entity_id":
+            out[f] = pad2(a, 0)
+        elif a.ndim == 2:
+            out[f] = pad2(a, val)
+        elif f == "pkg_entity_id":
+            # padded systems point at a padded (zero-NRE) package entity
+            # when one exists; entity 0 is safe regardless because padded
+            # systems have quantity 0 (no denominator impact).
+            out[f] = pad1(a, n1, ep0 if ep1 > ep0 else 0)
+        elif f == "mod_sys":
+            out[f] = pad1(a, m1, n0 if n1 > n0 else 0)
+        elif f == "mod_entity":
+            out[f] = pad1(a, m1, em0 if em1 > em0 else 0)
+        elif f == "d2d_sys":
+            out[f] = pad1(a, d1, n0 if n1 > n0 else 0)
+        elif f == "d2d_entity":
+            out[f] = pad1(a, d1, ed0 if ed1 > ed0 else 0)
+        elif f in ("chip_entity_area", "chip_entity_k", "chip_entity_fixed"):
+            out[f] = pad1(a, ec1)
+        elif f in ("pkg_entity_area", "pkg_entity_k", "pkg_entity_fixed"):
+            out[f] = pad1(a, ep1)
+        elif f in ("mod_entity_area", "mod_entity_k"):
+            out[f] = pad1(a, em1)
+        elif f == "d2d_entity_nre":
+            out[f] = pad1(a, ed1)
+        else:                     # (N,) per-system float leaves
+            out[f] = pad1(a, n1, val)
+    names = b.names
+    if names:
+        names = tuple(names) + tuple(f"__pad{i}" for i in range(n1 - n0))
+    return SystemBatch(**{k: jnp.asarray(v) for k, v in out.items()},
+                       names=names)

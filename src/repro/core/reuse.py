@@ -16,6 +16,7 @@ import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .system import Chip, Module, System, make_chip, soc_system
+from .technology import tech
 
 
 # ---------------------------------------------------------------------------
@@ -38,7 +39,6 @@ def scms_systems(module_area_mm2: float = 200.0, process: str = "7nm",
         pkg_area = None
         if package_reuse:
             # The shared package is sized for the largest system.
-            from .technology import tech
             pkg_area = (chiplet.area_mm2 * max_count
                         * tech(integration).package_area_factor)
         systems.append(System(
@@ -98,7 +98,6 @@ def ocme_systems(socket_area_mm2: float = 160.0, process: str = "7nm",
     pkg_area = None
     pkg_name = None
     if package_reuse:
-        from .technology import tech
         pkg_area = (C.area_mm2 * n_sockets
                     * tech(integration).package_area_factor)
         pkg_name = f"ocme_pkg_{integration}"
@@ -160,7 +159,6 @@ def fsmc_enumerate(n_chiplets: int = 6, k_sockets: int = 4,
                    process=process)
         chips.append(make_chip(f"fsmc_chip{i}", [m], process,
                                integration=integration))
-    from .technology import tech
     pkg_area = (chips[0].area_mm2 * k_sockets
                 * tech(integration).package_area_factor) if package_reuse else None
     systems = []
@@ -175,6 +173,52 @@ def fsmc_enumerate(n_chiplets: int = 6, k_sockets: int = 4,
             if limit is not None and len(systems) >= limit:
                 return systems
     return systems
+
+
+# ---------------------------------------------------------------------------
+# Portfolio reuse — SCMS generalized to per-SKU socket counts (repro.dse)
+# ---------------------------------------------------------------------------
+
+
+def portfolio_reuse_systems(slice_area_mm2: float, process: str,
+                            integration: str, counts: Sequence[int],
+                            quantities: Sequence[float],
+                            names: Optional[Sequence[str]] = None,
+                            package_reuse: bool = False,
+                            chip_name: Optional[str] = None) -> List[System]:
+    """One shared chiplet design collocated ``counts[i]`` times per SKU.
+
+    The SCMS scheme (Fig. 8) generalized to a product portfolio: SKU ``i``
+    is a package of ``counts[i]`` copies of a single ``slice_area_mm2``
+    chiplet on ``process``, produced in ``quantities[i]`` units.  Because
+    every system names the same chip design, packing the group with
+    ``SystemBatch.from_systems(..., share_nre=True)`` (or one dse group)
+    amortizes the chiplet NRE over the whole portfolio volume.
+    ``package_reuse`` additionally shares one package design sized for the
+    largest SKU (the smaller SKUs pay the oversized package, Sec. 5.1).
+    """
+    if len(counts) != len(quantities):
+        raise ValueError("counts and quantities must have equal length")
+    if min(counts) < 1:
+        raise ValueError("every SKU needs at least one chiplet")
+    if names is None:
+        names = [f"sku{i}" for i in range(len(counts))]
+    elif len(names) != len(counts):
+        raise ValueError("names and counts must have equal length")
+    if chip_name is None:
+        chip_name = f"reuse_{process}_{integration}_{slice_area_mm2:g}mm2"
+    m = Module(name=f"{chip_name}_modules", area_mm2=slice_area_mm2,
+               process=process)
+    chiplet = make_chip(chip_name, [m], process, integration=integration)
+    pkg_name = pkg_area = None
+    if package_reuse:
+        pkg_name = f"{chip_name}_pkg{max(counts)}s"
+        pkg_area = (chiplet.area_mm2 * max(counts)
+                    * tech(integration).package_area_factor)
+    return [System(name=nm, chips=tuple([chiplet] * k),
+                   integration=integration, quantity=float(q),
+                   package_name=pkg_name, package_area_mm2=pkg_area)
+            for nm, k, q in zip(names, counts, quantities)]
 
 
 def fsmc_situations(n_chiplets: int = 6, k_sockets: int = 4,

@@ -1,0 +1,49 @@
+"""repro.dse — portfolio-scale design-space exploration.
+
+The search layer on top of :class:`~repro.core.engine.CostEngine`:
+
+  space        -- declarative DesignSpace (SKUs, nodes, integrations,
+                  chiplet counts, cross-SKU reuse) + candidate algebra
+  evaluate     -- ChunkedEvaluator: constant-shape padded SystemBatch
+                  chunks, one retained jit trace per (chunk-shape, flow)
+  uncertainty  -- Monte Carlo cost distributions (vmapped engine) and
+                  grad-based parameter sensitivities
+  search       -- evolutionary portfolio optimizer (+ exhaustive
+                  cross-check), deterministic in an explicit PRNG key
+  report       -- candidate/SKU result tables, CostEngine.as_rows
+                  compatible, JSON-ready
+
+Quickstart::
+
+    import jax
+    from repro.dse import (DesignSpace, SKU, portfolio_search,
+                           search_summary)
+
+    space = DesignSpace(
+        skus=(SKU("laptop", 300.0, 2e6), SKU("desktop", 600.0, 1e6),
+              SKU("server", 900.0, 3e5)),
+        processes=("5nm", "7nm"), integrations=("MCM", "2.5D"),
+        chiplet_counts=(1, 2, 3, 4, 6))
+    res = portfolio_search(space, jax.random.PRNGKey(0))
+    print(res.best.label, res.best.portfolio_cost)
+"""
+from .space import (ArchChoice, Candidate, DesignSpace, ReuseChoice, SKU,
+                    candidate_systems)
+from .evaluate import (CandidateResult, ChunkShape, ChunkedEvaluator,
+                       chunk_shape, evaluate_direct)
+from .uncertainty import (SENSITIVITY_PARAMS, Uncertainty, mc_summary,
+                          mc_totals, portfolio_draws, sensitivities)
+from .search import (RiskConfig, SearchResult, exhaustive_search,
+                     portfolio_search)
+from .report import (detail_rows, format_table, result_rows, search_summary,
+                     to_json)
+
+__all__ = [
+    "ArchChoice", "Candidate", "DesignSpace", "ReuseChoice", "SKU",
+    "candidate_systems", "CandidateResult", "ChunkShape", "ChunkedEvaluator",
+    "chunk_shape", "evaluate_direct", "SENSITIVITY_PARAMS", "Uncertainty",
+    "mc_summary", "mc_totals", "portfolio_draws", "sensitivities",
+    "RiskConfig", "SearchResult", "exhaustive_search", "portfolio_search",
+    "detail_rows", "format_table", "result_rows", "search_summary",
+    "to_json",
+]

@@ -1,0 +1,230 @@
+"""Chunked, fixed-shape batched candidate pricing (repro.dse).
+
+Arbitrarily long candidate streams are priced through constant-shape
+:class:`~repro.core.batch.SystemBatch` chunks: each chunk holds up to
+``candidates_per_chunk`` candidate portfolios (one ``share_nre`` group
+per candidate, so NRE amortizes within a candidate but never across
+candidates), padded by :func:`~repro.core.batch.pad_batch` to the
+space's worst-case shape signature.  Every chunk therefore hits the same
+compiled :class:`~repro.core.engine.CostEngine` trace — pricing 10k+
+candidates is exactly one retained jit trace per (chunk-shape, flow),
+which ``benchmarks/dse_bench.py`` and ``tests/test_dse.py`` assert via
+``CostEngine.trace_counts()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from ..core.batch import SystemBatch, pad_batch
+from ..core.engine import CostEngine
+from .space import Candidate, DesignSpace, candidate_systems
+from .uncertainty import mc_totals, portfolio_draws
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkShape:
+    """Worst-case array signature of one evaluation chunk."""
+
+    candidates: int
+    n_systems: int
+    max_chips: int
+    chip_entities: int
+    pkg_entities: int
+    mod_entities: int
+    mod_instances: int
+    d2d_entities: int
+    d2d_instances: int
+
+    def pad_kwargs(self) -> Dict[str, int]:
+        d = dataclasses.asdict(self)
+        d.pop("candidates")
+        return d
+
+
+def chunk_shape(space: DesignSpace, candidates_per_chunk: int) -> ChunkShape:
+    """Upper-bound shapes for any ``candidates_per_chunk`` candidates.
+
+    Per candidate: S systems (one per SKU), each at most ``max_chips``
+    chips; each chip carries one functional module and at most one D2D
+    module instance; chip/module design entities are bounded by the chip
+    instances, package entities by S, D2D entities by the process menu.
+    Entity tables get one slack row so padded instances always have a
+    zero-NRE row to point at.
+    """
+    k = int(candidates_per_chunk)
+    s = len(space.skus)
+    c = space.max_chips()
+    per_cand_chips = s * c
+    return ChunkShape(
+        candidates=k,
+        n_systems=k * s,
+        max_chips=c,
+        chip_entities=k * per_cand_chips + 1,
+        pkg_entities=k * s + 1,
+        mod_entities=k * per_cand_chips + 1,
+        mod_instances=k * per_cand_chips,
+        d2d_entities=k * len(space.processes) + 1,
+        d2d_instances=k * per_cand_chips,
+    )
+
+
+@dataclasses.dataclass
+class CandidateResult:
+    """Priced candidate: per-SKU unit economics + the portfolio total."""
+
+    candidate: Candidate
+    label: str
+    sku_names: Sequence[str]
+    sku_unit_total: np.ndarray   # (S,) USD per unit, RE + amortized NRE
+    sku_unit_re: np.ndarray      # (S,)
+    sku_unit_nre: np.ndarray     # (S,)
+    portfolio_cost: float        # sum_i quantity_i * unit_total_i, USD
+    risk: Optional[Dict[str, float]] = None  # filled by uncertainty pass
+
+    def objective(self, key: str = "cost") -> float:
+        """Scalar ranking objective: 'cost' or a risk stat (e.g. 'q90')."""
+        if key == "cost":
+            return self.portfolio_cost
+        if self.risk is None or key not in self.risk:
+            raise KeyError(f"no risk stat {key!r} on {self.label}; "
+                           "evaluate with mc_key set")
+        return self.risk[key]
+
+
+class ChunkedEvaluator:
+    """Prices candidate streams in constant-shape chunks.
+
+    >>> ev = ChunkedEvaluator(space, candidates_per_chunk=64)
+    >>> results = ev.evaluate(space.sample(rng, 10_000))
+    >>> ev.systems_per_sec
+    """
+
+    def __init__(self, space: DesignSpace, candidates_per_chunk: int = 64,
+                 engine: Optional[CostEngine] = None,
+                 flow: str = "chip-last"):
+        self.space = space
+        self.engine = engine or CostEngine()
+        self.flow = flow
+        self.shape = chunk_shape(space, candidates_per_chunk)
+        self.reset_stats()
+
+    # -- throughput bookkeeping ---------------------------------------------
+    def reset_stats(self):
+        self.n_candidates = 0
+        self.n_systems = 0
+        self.n_chunks = 0
+        self.elapsed_s = 0.0
+
+    @property
+    def candidates_per_sec(self) -> float:
+        return self.n_candidates / max(self.elapsed_s, 1e-12)
+
+    @property
+    def systems_per_sec(self) -> float:
+        return self.n_systems / max(self.elapsed_s, 1e-12)
+
+    def stats(self) -> Dict[str, float]:
+        return {"n_candidates": self.n_candidates,
+                "n_systems": self.n_systems, "n_chunks": self.n_chunks,
+                "elapsed_s": self.elapsed_s,
+                "candidates_per_sec": self.candidates_per_sec,
+                "systems_per_sec": self.systems_per_sec}
+
+    # -- chunk assembly ------------------------------------------------------
+    def pack_chunk(self, chunk: Sequence[Candidate]) -> SystemBatch:
+        """Pack <= candidates_per_chunk candidates into one padded batch."""
+        if len(chunk) > self.shape.candidates:
+            raise ValueError(f"chunk of {len(chunk)} exceeds "
+                             f"{self.shape.candidates} candidates")
+        systems, groups = [], []
+        for j, cand in enumerate(chunk):
+            grp = candidate_systems(self.space, cand)
+            systems += grp
+            groups += [j] * len(grp)
+        batch = SystemBatch.from_systems(systems, share_nre=groups,
+                                         max_chips=self.shape.max_chips)
+        return pad_batch(batch, **self.shape.pad_kwargs())
+
+    def evaluate(self, candidates: Sequence[Candidate],
+                 mc_key=None, mc_draws: int = 128, mc_sigmas=None,
+                 mc_quantiles: Sequence[float] = (0.5, 0.9),
+                 ) -> List[CandidateResult]:
+        """Price every candidate; optionally attach Monte Carlo risk stats.
+
+        With ``mc_key`` set, each chunk is additionally priced under
+        ``mc_draws`` correlated parameter scenarios (see
+        :mod:`repro.dse.uncertainty`) — the *same* key (common random
+        numbers) is reused for every chunk so candidates are compared
+        under identical scenarios regardless of chunking.
+        """
+        candidates = list(candidates)
+        s = len(self.space.skus)
+        qty = np.asarray([sk.quantity for sk in self.space.skus], np.float64)
+        names = [sk.name for sk in self.space.skus]
+        out: List[CandidateResult] = []
+        k = self.shape.candidates
+        for lo in range(0, len(candidates), k):
+            chunk = candidates[lo:lo + k]
+            t0 = time.perf_counter()
+            batch = self.pack_chunk(chunk)
+            tc = jax.device_get(self.engine.total(batch, flow=self.flow))
+            pf_draws = None
+            if mc_key is not None:
+                draws = mc_totals(batch, mc_key, n_draws=mc_draws,
+                                  flow=self.flow, sigmas=mc_sigmas)
+                # fold the real (unpadded) rows into per-candidate
+                # portfolio costs: (draws, len(chunk))
+                pf_draws = np.asarray(jax.device_get(portfolio_draws(
+                    draws[:, :len(chunk) * s], qty, s)), np.float64)
+            self.elapsed_s += time.perf_counter() - t0
+            total = np.asarray(tc.total, np.float64)
+            re_tot = np.asarray(tc.re.total, np.float64)
+            nre_tot = np.asarray(tc.nre.total, np.float64)
+            for j, cand in enumerate(chunk):
+                rows = slice(j * s, (j + 1) * s)
+                unit = total[rows]
+                risk = None
+                if pf_draws is not None:
+                    pf = pf_draws[:, j]
+                    risk = {"mean": float(pf.mean()),
+                            "std": float(pf.std())}
+                    for q in mc_quantiles:
+                        risk[f"q{int(round(q * 100))}"] = \
+                            float(np.quantile(pf, q))
+                out.append(CandidateResult(
+                    candidate=cand, label=cand.label(), sku_names=names,
+                    sku_unit_total=unit, sku_unit_re=re_tot[rows],
+                    sku_unit_nre=nre_tot[rows],
+                    portfolio_cost=float((qty * unit).sum()), risk=risk))
+            self.n_candidates += len(chunk)
+            self.n_systems += len(chunk) * s
+            self.n_chunks += 1
+        return out
+
+
+def evaluate_direct(space: DesignSpace, cand: Candidate,
+                    engine: Optional[CostEngine] = None,
+                    flow: str = "chip-last") -> CandidateResult:
+    """Unchunked, unpadded single-candidate pricing (reference path).
+
+    Builds the candidate's group as its own ``share_nre=True`` batch and
+    prices it directly — the cross-check the padded-chunk parity tests
+    compare against.
+    """
+    engine = engine or CostEngine()
+    grp = candidate_systems(space, cand)
+    tc = jax.device_get(engine.total(
+        SystemBatch.from_systems(grp, share_nre=True), flow=flow))
+    qty = np.asarray([sk.quantity for sk in space.skus], np.float64)
+    unit = np.asarray(tc.total, np.float64)
+    return CandidateResult(
+        candidate=cand, label=cand.label(),
+        sku_names=[sk.name for sk in space.skus], sku_unit_total=unit,
+        sku_unit_re=np.asarray(tc.re.total, np.float64),
+        sku_unit_nre=np.asarray(tc.nre.total, np.float64),
+        portfolio_cost=float((qty * unit).sum()))

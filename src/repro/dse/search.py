@@ -1,0 +1,200 @@
+"""Portfolio optimizer: evolutionary search over the candidate space.
+
+Answers "what is the cheapest multi-chiplet architecture for this SKU
+portfolio at these volumes?" — optionally under parameter uncertainty,
+where the objective becomes a high quantile of the Monte Carlo portfolio
+cost and the result carries a cost-vs-risk Pareto front.
+
+The loop is a (mu + lambda) evolutionary search with elitism: sample a
+population, price it through the :class:`~repro.dse.evaluate.ChunkedEvaluator`
+(every generation reuses the same compiled chunk trace), keep the elite,
+refill by crossover + mutation, repeat.  All randomness flows from one
+explicit ``jax.random`` PRNG key, so the same key always returns the
+same winner (pinned by ``tests/test_dse.py``); already-priced candidates
+are cached and never re-evaluated.
+
+For brute-forceable spaces, :func:`exhaustive_search` enumerates — the
+cross-check that the evolutionary loop recovers the true optimum.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from ..core.explorer import pareto_front
+from .evaluate import CandidateResult, ChunkedEvaluator
+from .space import Candidate, DesignSpace
+from .uncertainty import Uncertainty
+
+
+@dataclasses.dataclass(frozen=True)
+class RiskConfig:
+    """Turns the search uncertainty-aware: optimize a cost quantile."""
+
+    n_draws: int = 128
+    sigmas: Uncertainty = dataclasses.field(default_factory=Uncertainty)
+    quantile: float = 0.9
+
+    @property
+    def objective_key(self) -> str:
+        return f"q{int(round(self.quantile * 100))}"
+
+
+@dataclasses.dataclass
+class SearchResult:
+    best: CandidateResult
+    ranked: List[CandidateResult]      # every priced candidate, best first
+    pareto: List[Dict]                 # cost-vs-risk front (risk runs only)
+    history: List[Dict]                # per-generation progress
+    n_evaluated: int                   # distinct candidates priced
+    objective_key: str = "cost"
+
+    def top(self, k: int = 10) -> List[CandidateResult]:
+        return self.ranked[:k]
+
+
+def _rank(results: Sequence[CandidateResult], key: str
+          ) -> List[CandidateResult]:
+    # label is the deterministic tie-breaker: equal-cost candidates
+    # always rank in the same order regardless of arrival order.
+    return sorted(results, key=lambda r: (r.objective(key), r.label))
+
+
+def _front(results: Sequence[CandidateResult], key: str) -> List[Dict]:
+    if key == "cost":
+        return []
+    pts = [{"label": r.label, "mean": r.risk["mean"], key: r.risk[key],
+            "candidate": r.candidate} for r in results if r.risk]
+    return pareto_front(pts, "mean", key)
+
+
+def _rng_from_key(key) -> np.random.Generator:
+    """Derive host-side randomness deterministically from a jax PRNG key."""
+    seed = int(jax.device_get(
+        jax.random.randint(key, (), 0, np.iinfo(np.int32).max)))
+    return np.random.default_rng(seed)
+
+
+def _check_evaluator(space: DesignSpace, flow: str,
+                     ev: ChunkedEvaluator) -> ChunkedEvaluator:
+    """A passed-in evaluator must agree with the search's space/flow —
+    it binds both, and a mismatch would silently price the wrong
+    portfolio."""
+    if ev.space != space:
+        raise ValueError("evaluator was built for a different DesignSpace")
+    if ev.flow != flow:
+        raise ValueError(
+            f"evaluator flow {ev.flow!r} != requested flow {flow!r}")
+    return ev
+
+
+def _mc_kwargs(risk: RiskConfig, mc_key) -> Dict:
+    return dict(mc_key=mc_key, mc_draws=risk.n_draws, mc_sigmas=risk.sigmas,
+                mc_quantiles=(0.5, risk.quantile))
+
+
+def _default_mc_key(key):
+    """The one shared derivation of the Monte Carlo key from a search key:
+    exhaustive and evolutionary runs given the same ``key`` price every
+    candidate under identical scenarios, so their quantile objectives are
+    directly comparable (common random numbers)."""
+    return jax.random.fold_in(key, 1)
+
+
+def exhaustive_search(space: DesignSpace,
+                      evaluator: Optional[ChunkedEvaluator] = None,
+                      flow: str = "chip-last",
+                      risk: Optional[RiskConfig] = None,
+                      mc_key=None, key=None) -> SearchResult:
+    """Price every candidate in the space (small spaces only).
+
+    In risk mode the Monte Carlo scenarios come from ``mc_key`` (or are
+    derived from ``key`` exactly as :func:`portfolio_search` does, so
+    passing the same ``key`` to both makes their quantile objectives
+    comparable).
+    """
+    ev = _check_evaluator(space, flow, evaluator) if evaluator \
+        else ChunkedEvaluator(space, flow=flow)
+    kw = {}
+    obj = "cost"
+    if risk is not None:
+        if mc_key is None:
+            mc_key = _default_mc_key(key if key is not None
+                                     else jax.random.PRNGKey(0))
+        kw = _mc_kwargs(risk, mc_key)
+        obj = risk.objective_key
+    results = ev.evaluate(list(space.enumerate_candidates()), **kw)
+    ranked = _rank(results, obj)
+    return SearchResult(best=ranked[0], ranked=ranked,
+                        pareto=_front(results, obj), history=[],
+                        n_evaluated=len(results), objective_key=obj)
+
+
+def portfolio_search(space: DesignSpace, key, *,
+                     population: int = 32, generations: int = 12,
+                     elite: int = 6, jump_prob: float = 0.15,
+                     risk: Optional[RiskConfig] = None,
+                     evaluator: Optional[ChunkedEvaluator] = None,
+                     flow: str = "chip-last") -> SearchResult:
+    """Evolutionary portfolio search, deterministic in ``key``.
+
+    ``risk=RiskConfig(...)`` switches the objective from nominal
+    portfolio cost to the configured Monte Carlo quantile (common random
+    numbers across all candidates, derived from ``key``).
+    """
+    if elite < 1 or elite > population:
+        raise ValueError("need 1 <= elite <= population")
+    rng = _rng_from_key(key)
+    ev = _check_evaluator(space, flow, evaluator) if evaluator \
+        else ChunkedEvaluator(space, candidates_per_chunk=min(population, 64),
+                              flow=flow)
+    obj = "cost"
+    ev_kw = {}
+    if risk is not None:
+        obj = risk.objective_key
+        ev_kw = _mc_kwargs(risk, _default_mc_key(key))
+
+    seen: Dict[Candidate, CandidateResult] = {}
+    history: List[Dict] = []
+
+    def price(cands: Sequence[Candidate]):
+        fresh = []
+        for c in cands:
+            if c not in seen and c not in fresh:
+                fresh.append(c)
+        for r in ev.evaluate(fresh, **ev_kw):
+            seen[r.candidate] = r
+
+    pop = space.sample(rng, population)
+    for gen in range(generations):
+        price(pop)
+        ranked_pop = _rank([seen[c] for c in set(pop)], obj)
+        elites = ranked_pop[:elite]
+        best_all = _rank(list(seen.values()), obj)[0]
+        history.append({"generation": gen, "evaluated": len(seen),
+                        "best_objective": best_all.objective(obj),
+                        "best_label": best_all.label,
+                        "gen_best": ranked_pop[0].objective(obj)})
+        if gen == generations - 1:
+            break
+        next_pop = [r.candidate for r in elites]
+        guard = 0
+        while len(next_pop) < population:
+            pa = elites[int(rng.integers(len(elites)))].candidate
+            pb = elites[int(rng.integers(len(elites)))].candidate
+            child = space.crossover(rng, pa, pb)
+            if rng.random() < 0.8:
+                child = space.mutate(rng, child, jump_prob=jump_prob)
+            guard += 1
+            if child in next_pop and guard < 10 * population:
+                continue
+            next_pop.append(child)
+        pop = next_pop
+
+    ranked = _rank(list(seen.values()), obj)
+    return SearchResult(best=ranked[0], ranked=ranked,
+                        pareto=_front(ranked, obj), history=history,
+                        n_evaluated=len(seen), objective_key=obj)

@@ -1,0 +1,322 @@
+"""Declarative multi-chiplet design-space definition (repro.dse).
+
+A :class:`DesignSpace` describes a *product portfolio* — the SKUs a
+vendor ships, each with a module inventory (total functional area) and a
+production volume — together with the architectural freedoms the search
+may exercise: allowed process nodes, integration technologies, chiplet
+counts, and cross-SKU chiplet-reuse (the paper's SCMS scheme generalized
+to arbitrary per-SKU socket counts via
+:func:`repro.core.reuse.portfolio_reuse_systems`).
+
+A :class:`Candidate` is one fully concrete point of that space: either a
+per-SKU tuple of :class:`ArchChoice` (independent architectures) or a
+:class:`ReuseChoice` (one shared chiplet design collocated across the
+whole portfolio).  ``candidate_systems`` lowers a candidate to the
+:class:`~repro.core.system.System` group that
+:class:`~repro.core.batch.SystemBatch` packs and the engine prices.
+
+The space is countable: ``size()`` / ``candidate_at(i)`` give a total
+order, so exhaustive enumeration, uniform sampling and index-based
+decoding all agree — the property the seeded-determinism tests pin.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import itertools
+from typing import Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.reuse import portfolio_reuse_systems
+from ..core.system import System, spec
+from ..core.technology import node, tech
+
+_REL_TOL = 1e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class SKU:
+    """One product in the portfolio: a module inventory and its volume."""
+
+    name: str
+    module_area_mm2: float
+    quantity: float
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchChoice:
+    """Architecture of a single SKU: ``n_chiplets`` even slices of the
+    module area on ``process``, packaged with ``integration``.
+
+    ``n_chiplets == 1`` always means the monolithic SoC baseline
+    (integration "SoC", no D2D overhead), as in the paper's Fig. 4.
+    """
+
+    n_chiplets: int
+    process: str
+    integration: str
+
+    def label(self) -> str:
+        if self.n_chiplets == 1:
+            return f"soc/{self.process}"
+        return f"{self.n_chiplets}x/{self.process}/{self.integration}"
+
+
+@dataclasses.dataclass(frozen=True)
+class ReuseChoice:
+    """One shared chiplet design across the whole portfolio (SCMS-style):
+    every SKU is ``round(area / slice_area_mm2)`` copies of the slice."""
+
+    slice_area_mm2: float
+    process: str
+    integration: str
+    package_reuse: bool = False
+
+    def label(self) -> str:
+        pkg = "+pkg" if self.package_reuse else ""
+        return (f"reuse[{self.slice_area_mm2:g}mm2/{self.process}"
+                f"/{self.integration}{pkg}]")
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One concrete portfolio architecture (hashable — search dedup key)."""
+
+    choices: Tuple[ArchChoice, ...] = ()
+    reuse: Optional[ReuseChoice] = None
+
+    def __post_init__(self):
+        if (self.reuse is None) == (not self.choices):
+            raise ValueError("candidate needs choices xor a reuse scheme")
+
+    @property
+    def is_reuse(self) -> bool:
+        return self.reuse is not None
+
+    def label(self) -> str:
+        if self.reuse is not None:
+            return self.reuse.label()
+        return " | ".join(c.label() for c in self.choices)
+
+
+@dataclasses.dataclass(frozen=True)
+class DesignSpace:
+    """The searchable portfolio design space.
+
+    ``chiplet_counts`` containing 1 enables the monolithic-SoC option per
+    SKU; counts > 1 combine with every (process, integration) pair.
+    ``allow_reuse`` adds SCMS-style candidates whose slice areas are
+    derived from the SKU areas (a slice is valid iff every SKU area is an
+    in-range integer multiple of it).  ``reuse_within_sku`` gives the
+    slices of one non-reuse split a single design name (chiplet NRE paid
+    once per SKU); the paper's Fig. 4 no-reuse assumption is
+    ``reuse_within_sku=False``.
+    """
+
+    skus: Tuple[SKU, ...]
+    processes: Tuple[str, ...] = ("7nm",)
+    integrations: Tuple[str, ...] = ("MCM",)
+    chiplet_counts: Tuple[int, ...] = (1, 2, 3, 4)
+    allow_reuse: bool = True
+    reuse_package_options: Tuple[bool, ...] = (False,)
+    reuse_within_sku: bool = True
+
+    def __post_init__(self):
+        if not self.skus:
+            raise ValueError("design space needs at least one SKU")
+        names = [s.name for s in self.skus]
+        if len(set(names)) != len(names):
+            raise ValueError("SKU names must be unique")
+        if not self.processes:
+            raise ValueError("design space needs at least one process node")
+        if not self.integrations and max(self.chiplet_counts) > 1:
+            raise ValueError(
+                "chiplet counts > 1 need at least one integration tech")
+        for p in self.processes:
+            node(p)
+        for t in self.integrations:
+            if t == "SoC":
+                raise ValueError(
+                    "integrations are multi-chip technologies; the SoC "
+                    "baseline is the n_chiplets=1 option")
+            tech(t)
+        if not self.chiplet_counts or min(self.chiplet_counts) < 1:
+            raise ValueError("chiplet_counts must be positive")
+
+    # -- choice inventories (cached: the space is frozen, and the search
+    # loop asks for them on every sample/mutate/crossover) -------------------
+    @functools.cached_property
+    def _arch_choices(self) -> Tuple[ArchChoice, ...]:
+        out = []
+        if 1 in self.chiplet_counts:
+            out += [ArchChoice(1, p, "SoC") for p in self.processes]
+        out += [ArchChoice(n, p, t)
+                for n in sorted(set(self.chiplet_counts)) if n > 1
+                for p in self.processes for t in self.integrations]
+        return tuple(out)
+
+    @functools.cached_property
+    def _reuse_choices(self) -> Tuple[ReuseChoice, ...]:
+        if not self.allow_reuse:
+            return ()
+        return tuple(ReuseChoice(a, p, t, pkg)
+                     for a in self.reuse_slice_areas()
+                     for p in self.processes for t in self.integrations
+                     for pkg in self.reuse_package_options)
+
+    def arch_choices(self) -> List[ArchChoice]:
+        """Per-SKU architecture options (same menu for every SKU)."""
+        return list(self._arch_choices)
+
+    def reuse_slice_areas(self) -> List[float]:
+        """Slice areas under which every SKU is an in-range integer
+        multiple — the valid cross-SKU reuse granularities."""
+        counts = sorted(set(self.chiplet_counts))
+        cands = sorted({s.module_area_mm2 / n
+                        for s in self.skus for n in counts}, reverse=True)
+        out: List[float] = []
+        for a in cands:
+            ok = True
+            for s in self.skus:
+                k = s.module_area_mm2 / a
+                if abs(k - round(k)) > _REL_TOL * max(k, 1.0) \
+                        or int(round(k)) not in counts:
+                    ok = False
+                    break
+            if ok and not any(abs(a - b) <= _REL_TOL * a for b in out):
+                out.append(a)
+        return out
+
+    def reuse_choices(self) -> List[ReuseChoice]:
+        return list(self._reuse_choices)
+
+    def reuse_counts(self, r: ReuseChoice) -> Tuple[int, ...]:
+        """Per-SKU socket counts under ``r`` — rejects a slice that does
+        not implement the SKU inventories (wrong area or out-of-range
+        count), so foreign/hand-built reuse candidates cannot be silently
+        lowered to the wrong silicon."""
+        counts = []
+        for s in self.skus:
+            k = s.module_area_mm2 / r.slice_area_mm2
+            if abs(k - round(k)) > _REL_TOL * max(k, 1.0) \
+                    or int(round(k)) not in self.chiplet_counts:
+                raise ValueError(
+                    f"slice {r.slice_area_mm2:g} mm^2 does not tile SKU "
+                    f"{s.name!r} ({s.module_area_mm2:g} mm^2) within the "
+                    f"allowed chiplet counts {self.chiplet_counts}")
+            counts.append(int(round(k)))
+        return tuple(counts)
+
+    # -- countable enumeration ----------------------------------------------
+    def size(self) -> int:
+        return (len(self._arch_choices) ** len(self.skus)
+                + len(self._reuse_choices))
+
+    def candidate_at(self, i: int) -> Candidate:
+        """Decode index ``i`` (0 <= i < size()) into a candidate."""
+        arch = self._arch_choices
+        n_arch = len(arch) ** len(self.skus)
+        if i < 0 or i >= self.size():
+            raise IndexError(f"candidate index {i} out of range")
+        if i < n_arch:
+            # match enumerate_candidates(): SKU 0 is the most significant
+            # digit of the mixed-radix index
+            digits = []
+            for _ in self.skus:
+                i, d = divmod(i, len(arch))
+                digits.append(arch[d])
+            return Candidate(choices=tuple(reversed(digits)))
+        return Candidate(reuse=self._reuse_choices[i - n_arch])
+
+    def enumerate_candidates(self) -> Iterator[Candidate]:
+        for combo in itertools.product(self._arch_choices,
+                                       repeat=len(self.skus)):
+            yield Candidate(choices=combo)
+        for r in self._reuse_choices:
+            yield Candidate(reuse=r)
+
+    def sample(self, rng: np.random.Generator, n: int) -> List[Candidate]:
+        """Uniform-with-replacement sample of ``n`` candidates."""
+        return [self.candidate_at(int(i))
+                for i in rng.integers(0, self.size(), size=n)]
+
+    # -- search neighborhood -------------------------------------------------
+    def mutate(self, rng: np.random.Generator, cand: Candidate,
+               jump_prob: float = 0.15) -> Candidate:
+        """A random neighbor: tweak one SKU's choice (or hop between the
+        reuse and independent families); occasionally jump anywhere."""
+        if rng.random() < jump_prob:
+            return self.candidate_at(int(rng.integers(0, self.size())))
+        reuse = self._reuse_choices
+        if cand.is_reuse:
+            if len(reuse) > 1 and rng.random() < 0.7:
+                others = [r for r in reuse if r != cand.reuse]
+                return Candidate(reuse=others[int(rng.integers(len(others)))])
+            return self.candidate_at(
+                int(rng.integers(0, len(self._arch_choices)
+                                 ** len(self.skus))))
+        arch = self._arch_choices
+        if reuse and rng.random() < 0.15:
+            return Candidate(reuse=reuse[int(rng.integers(len(reuse)))])
+        i = int(rng.integers(len(self.skus)))
+        others = [a for a in arch if a != cand.choices[i]]
+        if not others:
+            return cand
+        new = list(cand.choices)
+        new[i] = others[int(rng.integers(len(others)))]
+        return Candidate(choices=tuple(new))
+
+    def crossover(self, rng: np.random.Generator, a: Candidate,
+                  b: Candidate) -> Candidate:
+        """Per-SKU uniform crossover; reuse candidates fall back to
+        mutation (they have no per-SKU genes)."""
+        if a.is_reuse or b.is_reuse:
+            return self.mutate(rng, a)
+        picks = rng.integers(0, 2, size=len(self.skus))
+        return Candidate(choices=tuple(
+            (a if p == 0 else b).choices[i] for i, p in enumerate(picks)))
+
+    # -- batching bounds -----------------------------------------------------
+    def max_chips(self) -> int:
+        """Widest system any candidate can produce (padding bound)."""
+        m = max(self.chiplet_counts)
+        for r in self._reuse_choices:
+            m = max(m, max(self.reuse_counts(r)))
+        return m
+
+
+def candidate_systems(space: DesignSpace, cand: Candidate) -> List[System]:
+    """Lower one candidate to its per-SKU :class:`System` group.
+
+    The group is meant to be priced with NRE shared *within* the
+    candidate (one ``share_nre`` group): reuse candidates then amortize
+    the single chiplet design over the whole portfolio volume.
+    """
+    if cand.choices and len(cand.choices) != len(space.skus):
+        raise ValueError(
+            f"candidate has {len(cand.choices)} per-SKU choices but the "
+            f"space has {len(space.skus)} SKUs")
+    if cand.reuse is not None:
+        r = cand.reuse
+        return portfolio_reuse_systems(
+            r.slice_area_mm2, r.process, r.integration,
+            counts=list(space.reuse_counts(r)),
+            quantities=[s.quantity for s in space.skus],
+            names=[s.name for s in space.skus],
+            package_reuse=r.package_reuse)
+    out = []
+    for sku, c in zip(space.skus, cand.choices):
+        if c.n_chiplets == 1:
+            out.append(spec({"kind": "soc", "name": sku.name,
+                             "area": sku.module_area_mm2,
+                             "process": c.process,
+                             "quantity": sku.quantity}))
+        else:
+            out.append(spec({"kind": "split", "name": sku.name,
+                             "area": sku.module_area_mm2,
+                             "process": c.process, "n": c.n_chiplets,
+                             "integration": c.integration,
+                             "quantity": sku.quantity,
+                             "reuse_chiplet": space.reuse_within_sku}))
+    return out

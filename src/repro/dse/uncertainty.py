@@ -1,0 +1,162 @@
+"""Uncertainty-aware pricing: Monte Carlo distributions + sensitivities.
+
+The technology numbers behind the cost model (defect densities, wafer
+prices, bond yields) are estimates, and the *ranking* of candidate
+architectures can flip within their error bars — big monolithic dies are
+exposed to defect-density risk, many-chiplet systems to bonding-yield
+risk.  This module prices that exposure:
+
+* :func:`mc_totals` vmaps the (un-jitted) engine implementation over
+  ``n_draws`` sampled parameter scenarios inside one module-level jit —
+  a (draws, N) matrix of per-unit totals from a single retained trace
+  per batch shape.  Draws are *systematic* by default (one multiplier
+  per scenario applied batch-wide, i.e. "what if 7nm defect density is
+  20% worse than assumed"), which is the correlated, ranking-relevant
+  kind of uncertainty; ``correlated=False`` switches to per-element
+  idiosyncratic jitter.  Lognormal multipliers are median-preserving, so
+  the q50 scenario reproduces the nominal model.
+* :func:`mc_summary` reduces the draw matrix to mean/std/quantiles.
+* :func:`sensitivities` reuses the engine's differentiability: one
+  reverse-mode gradient gives per-system elasticities d(cost)/d(ln p)
+  for every uncertain parameter — the local, deterministic complement to
+  the Monte Carlo picture.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.batch import SystemBatch
+from ..core.engine import TRACE_COUNTS, _total_impl
+
+
+@dataclasses.dataclass(frozen=True)
+class Uncertainty:
+    """Lognormal sigmas of the uncertain technology parameters.
+
+    ``defect_sigma`` scales chip defect densities, ``wafer_cost_sigma``
+    wafer prices, ``bond_sigma`` the *failure rates* ``1 - y2`` /
+    ``1 - y3`` (so yields stay <= 1), ``interposer_sigma`` the
+    interposer defect density.
+    """
+
+    defect_sigma: float = 0.20
+    wafer_cost_sigma: float = 0.10
+    bond_sigma: float = 0.25
+    interposer_sigma: float = 0.20
+
+    def as_array(self) -> jnp.ndarray:
+        return jnp.asarray([self.defect_sigma, self.wafer_cost_sigma,
+                            self.bond_sigma, self.interposer_sigma],
+                           jnp.float32)
+
+
+def _mc_impl(batch: SystemBatch, key, sig, flow: str, n_draws: int,
+             correlated: bool):
+    TRACE_COUNTS["mc"] += 1
+
+    def one(k):
+        kd, kw, kb, ks, ki = jax.random.split(k, 5)
+
+        def mult(kk, like, s):
+            shape = () if correlated else like.shape
+            return jnp.exp(s * jax.random.normal(kk, shape))
+
+        def fail(kk, y, s):
+            # perturb the failure rate so yields stay in (0, 1]
+            return jnp.clip(1.0 - (1.0 - y) * mult(kk, y, s), 1e-3, 1.0)
+
+        b = batch.replace(
+            chip_defect=batch.chip_defect * mult(kd, batch.chip_defect,
+                                                 sig[0]),
+            chip_wafer_cost=batch.chip_wafer_cost
+            * mult(kw, batch.chip_wafer_cost, sig[1]),
+            y2_chip_bond=fail(kb, batch.y2_chip_bond, sig[2]),
+            y3_substrate_bond=fail(ks, batch.y3_substrate_bond, sig[2]),
+            interposer_defect=batch.interposer_defect
+            * mult(ki, batch.interposer_defect, sig[3]),
+        )
+        return _total_impl(b, flow).total
+
+    return jax.vmap(one)(jax.random.split(key, n_draws))
+
+
+_MC_JIT = jax.jit(_mc_impl,
+                  static_argnames=("flow", "n_draws", "correlated"))
+
+
+def mc_totals(batch: SystemBatch, key, *, n_draws: int = 128,
+              flow: str = "chip-last", sigmas: Uncertainty = None,
+              correlated: bool = True) -> jnp.ndarray:
+    """(n_draws, N) per-unit totals under sampled parameter scenarios."""
+    sig = (sigmas or Uncertainty()).as_array()
+    return _MC_JIT(batch, key, sig, flow, int(n_draws), bool(correlated))
+
+
+def mc_summary(batch: SystemBatch, key, *, n_draws: int = 128,
+               flow: str = "chip-last", sigmas: Uncertainty = None,
+               correlated: bool = True,
+               quantiles: Sequence[float] = (0.05, 0.5, 0.95),
+               ) -> Dict[str, jnp.ndarray]:
+    """Per-system cost distribution stats: mean/std + requested quantiles."""
+    draws = mc_totals(batch, key, n_draws=n_draws, flow=flow, sigmas=sigmas,
+                      correlated=correlated)
+    out = {"mean": draws.mean(axis=0), "std": draws.std(axis=0)}
+    qs = jnp.quantile(draws, jnp.asarray(list(quantiles)), axis=0)
+    for i, q in enumerate(quantiles):
+        out[f"q{int(round(q * 100))}"] = qs[i]
+    return out
+
+
+# Parameters whose local elasticity we report: every (N, C) chip leaf is
+# reduced over the chip axis to a per-system number.
+SENSITIVITY_PARAMS: Tuple[str, ...] = (
+    "chip_defect", "chip_wafer_cost", "y2_chip_bond", "y3_substrate_bond",
+    "interposer_defect", "substrate_cost", "assembly_yield",
+)
+
+
+def _sens_impl(batch: SystemBatch, flow: str, params: Tuple[str, ...]):
+    TRACE_COUNTS["sens"] += 1
+
+    def f(leaves):
+        # Each system's cost depends only on its own rows of these RE
+        # parameters, so the gradient of the sum is the per-system grad.
+        return _total_impl(batch.replace(**leaves), flow).total.sum()
+
+    leaves = {p: getattr(batch, p) for p in params}
+    g = jax.grad(f)(leaves)
+    out = {}
+    for p, gv in g.items():
+        elast = gv * leaves[p]          # d cost / d ln(p)
+        out[p] = elast.sum(-1) if elast.ndim == 2 else elast
+    return out
+
+
+_SENS_JIT = jax.jit(_sens_impl, static_argnames=("flow", "params"))
+
+
+def sensitivities(batch: SystemBatch, flow: str = "chip-last",
+                  params: Sequence[str] = SENSITIVITY_PARAMS,
+                  ) -> Dict[str, jnp.ndarray]:
+    """Per-system elasticities d(total)/d(ln p) — USD per 100% parameter
+    move, from one reverse-mode gradient through the engine."""
+    return _SENS_JIT(batch, flow, tuple(params))
+
+
+def portfolio_draws(draws, quantities, n_skus: int):
+    """Fold (draws, K*S) per-unit totals into (draws, K) portfolio costs."""
+    d = jnp.asarray(draws)
+    n = d.shape[1] // n_skus
+    q = jnp.asarray(quantities, d.dtype)
+    return (d[:, :n * n_skus].reshape(d.shape[0], n, n_skus)
+            * q[None, None, :]).sum(-1)
+
+
+def trace_counts() -> Dict[str, int]:
+    """Snapshot of the shared engine trace counters (incl. mc/sens)."""
+    return dict(collections.Counter(TRACE_COUNTS))
