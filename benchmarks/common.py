@@ -1,8 +1,25 @@
-"""Shared helpers for the benchmark suite (CSV emission + timing)."""
+"""Shared helpers for the benchmark suite (CSV emission, timing, and the
+BENCH_*.json perf-trajectory files CI tracks)."""
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 from typing import Callable, Iterable
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def write_bench_json(name: str, summary: dict) -> pathlib.Path:
+    """Persist a benchmark summary as ``BENCH_<name>.json`` at the repo
+    root.  CI uploads these as artifacts and
+    ``scripts/check_bench_regression.py`` guards them against the
+    committed baselines in ``benchmarks/baselines/``."""
+    path = REPO_ROOT / f"BENCH_{name}.json"
+    path.write_text(json.dumps(summary, indent=2, sort_keys=True,
+                               default=float) + "\n")
+    print(f"# wrote {path}")
+    return path
 
 
 def emit(section: str, rows: Iterable[dict]):

@@ -18,6 +18,8 @@ import jax
 from repro.core import CostEngine, SystemBatch, amortized_costs, re_cost, spec
 from repro.core.engine import TRACE_COUNTS
 
+from .common import write_bench_json
+
 NODES = ("5nm", "7nm", "12nm", "14nm", "28nm")
 INTEGRATIONS = ("SoC", "MCM", "InFO", "2.5D")
 
@@ -90,9 +92,12 @@ def run(n_systems: int = 10_000):
     print(f"parity worst rel err : {worst:.2e}")
     print(f"trace counts         : {dict(TRACE_COUNTS)} (no retrace across "
           f"{reps} repeat sweeps)")
-    return {"n": n_systems, "t_pack_s": t_pack, "t_first_s": t_first,
-            "t_engine_s": t_engine, "t_loop_s": t_loop,
-            "speedup": t_loop / t_engine, "worst_rel": worst}
+    summary = {"n": n_systems, "t_pack_s": t_pack, "t_first_s": t_first,
+               "t_engine_s": t_engine, "t_loop_s": t_loop,
+               "systems_per_sec": n_systems / t_engine,
+               "speedup": t_loop / t_engine, "worst_rel": worst}
+    write_bench_json("engine", summary)
+    return summary
 
 
 if __name__ == "__main__":

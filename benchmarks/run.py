@@ -1,17 +1,21 @@
 """Benchmark orchestrator: one section per paper table/figure plus the
-roofline, codesign and kernel benches.
+roofline, codesign, kernel, engine and DSE benches.
 
   PYTHONPATH=src python -m benchmarks.run
+
+The engine and DSE benches persist their summaries as BENCH_engine.json /
+BENCH_dse.json at the repo root (perf trajectory; CI uploads them as
+artifacts and guards them with scripts/check_bench_regression.py).
 """
 import sys
 import time
 
 
 def main() -> None:
-    from . import (ablations, codesign, dse_bench, fig2_yield_cost,
-                   fig4_re_integration, fig5_amd, fig6_single_system,
-                   fig8_scms, fig9_ocme, fig10_fsmc, kernels_bench,
-                   roofline)
+    from . import (ablations, codesign, dse_bench, engine_bench,
+                   fig2_yield_cost, fig4_re_integration, fig5_amd,
+                   fig6_single_system, fig8_scms, fig9_ocme, fig10_fsmc,
+                   kernels_bench, roofline)
 
     benches = [
         ("fig2", fig2_yield_cost), ("fig4", fig4_re_integration),
@@ -19,7 +23,8 @@ def main() -> None:
         ("fig8", fig8_scms), ("fig9", fig9_ocme), ("fig10", fig10_fsmc),
         ("ablations", ablations),
         ("roofline", roofline), ("codesign", codesign),
-        ("kernels", kernels_bench), ("dse", dse_bench),
+        ("kernels", kernels_bench), ("engine", engine_bench),
+        ("dse", dse_bench),
     ]
     failures = 0
     for name, mod in benches:

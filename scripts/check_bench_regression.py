@@ -1,0 +1,91 @@
+"""Guard the benchmark perf trajectory against the committed baselines.
+
+  python scripts/check_bench_regression.py [--min-ratio 0.15] [name ...]
+
+Compares the ``BENCH_<name>.json`` files the benchmarks write at the
+repo root (see ``benchmarks/common.write_bench_json``) against the
+committed ``benchmarks/baselines/BENCH_<name>.json``:
+
+* throughput keys must stay within ``--min-ratio`` of the baseline
+  (generous by default: CI boxes are noisy and shared, so the guard
+  catches order-of-magnitude regressions, not jitter);
+* absolute floors/ceilings (speedup ratios, parity errors) are enforced
+  exactly — these are correctness-adjacent and machine-independent.
+
+Exit code 1 on any violation; prints a per-key PASS/FAIL table.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+BASELINES = ROOT / "benchmarks" / "baselines"
+
+# (key, kind, threshold): kind "ratio" compares against min_ratio *
+# baseline[key]; "min"/"max" are machine-independent absolute bounds.
+RULES = {
+    "dse": [
+        ("candidates_per_sec", "ratio", None),
+        ("fused_vs_legacy", "min", 10.0),
+        ("parity_vs_legacy_rel", "max", 1e-6),
+        ("parity_worst_rel", "max", 1e-5),
+    ],
+    "engine": [
+        ("systems_per_sec", "ratio", None),
+        ("worst_rel", "max", 1e-5),
+    ],
+}
+
+
+def check(name: str, min_ratio: float) -> bool:
+    if name not in RULES:
+        print(f"[{name}] UNKNOWN benchmark — known: {sorted(RULES)}")
+        return False
+    cur_path = ROOT / f"BENCH_{name}.json"
+    base_path = BASELINES / f"BENCH_{name}.json"
+    if not cur_path.exists():
+        print(f"[{name}] MISSING {cur_path} — run the benchmark first")
+        return False
+    if not base_path.exists():
+        print(f"[{name}] MISSING baseline {base_path} — commit one "
+              f"(copy a trusted BENCH_{name}.json there)")
+        return False
+    cur = json.loads(cur_path.read_text())
+    base = json.loads(base_path.read_text())
+    ok = True
+    for key, kind, bound in RULES[name]:
+        have = float(cur[key])
+        if kind == "ratio":
+            want = min_ratio * float(base[key])
+            good = have >= want
+            detail = (f">= {want:,.1f} ({min_ratio:g}x baseline "
+                      f"{float(base[key]):,.1f})")
+        elif kind == "min":
+            good = have >= bound
+            detail = f">= {bound:g}"
+        else:
+            good = have <= bound
+            detail = f"<= {bound:g}"
+        print(f"[{name}] {'PASS' if good else 'FAIL'} {key} = {have:,.6g} "
+              f"(need {detail})")
+        ok &= good
+    return ok
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("names", nargs="*", default=list(RULES))
+    ap.add_argument("--min-ratio", type=float, default=0.15,
+                    help="throughput floor as a fraction of baseline")
+    args = ap.parse_args()
+    ok = all(check(n, args.min_ratio) for n in (args.names or list(RULES)))
+    if not ok:
+        print("benchmark regression detected")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -308,6 +308,60 @@ class SystemBatch:
         )
 
     @classmethod
+    def from_arrays(cls, *, names: Tuple[str, ...] = (),
+                    **leaves) -> "SystemBatch":
+        """Array-native constructor: build a batch straight from its leaf
+        arrays with no host-side packing.
+
+        This is the zero-Python path the vectorized candidate encoder
+        (:func:`repro.dse.space.encode_batch`) uses to assemble a batch
+        *inside* a jit trace — every leaf may be a traced ``jnp`` value.
+        All ``_LEAVES`` fields are required; axis sizes are
+        cross-checked (shapes are static even under tracing) so a
+        mis-assembled batch fails here rather than deep inside the
+        engine's segment sums.
+        """
+        missing = [f for f in cls._LEAVES if f not in leaves]
+        extra = [k for k in leaves if k not in cls._LEAVES]
+        if missing or extra:
+            raise ValueError(
+                f"from_arrays: missing leaves {missing}, unknown {extra}")
+        a = {k: jnp.asarray(v) for k, v in leaves.items()}
+        if a["chip_area"].ndim != 2:
+            raise ValueError("from_arrays: chip_area must be (N, C), got "
+                             f"shape {a['chip_area'].shape}")
+        n, c = a["chip_area"].shape
+        checks = {}
+        for k in ("chip_defect", "chip_wafer_cost", "chip_cluster",
+                  "chip_wafer_yield", "chip_sort_cost", "chip_bump_cost",
+                  "chip_mask", "chip_entity_id"):
+            checks[k] = (n, c)
+        for k in ("package_area", "package_area_factor", "substrate_cost",
+                  "substrate_layer", "interposer_cost", "interposer_defect",
+                  "interposer_area_factor", "interposer_cluster",
+                  "y2_chip_bond", "y3_substrate_bond", "assembly_yield",
+                  "bond_cost_per_chip", "quantity", "pkg_entity_id"):
+            checks[k] = (n,)
+        for grp in (("chip_entity_area", "chip_entity_k",
+                     "chip_entity_fixed"),
+                    ("pkg_entity_area", "pkg_entity_k", "pkg_entity_fixed"),
+                    ("mod_entity_area", "mod_entity_k"),
+                    ("d2d_entity_nre",),
+                    ("mod_sys", "mod_entity"), ("d2d_sys", "d2d_entity")):
+            if a[grp[0]].ndim != 1:
+                raise ValueError(
+                    f"from_arrays: {grp[0]} must be 1-D, got shape "
+                    f"{a[grp[0]].shape}")
+            for k in grp[1:]:
+                checks[k] = a[grp[0]].shape
+        for k, want in checks.items():
+            if a[k].shape != tuple(want):
+                raise ValueError(
+                    f"from_arrays: {k} has shape {a[k].shape}, "
+                    f"expected {tuple(want)}")
+        return cls(**a, names=tuple(names))
+
+    @classmethod
     def from_specs(cls, specs: Sequence[Mapping],
                    max_chips: Optional[int] = None,
                    share_nre: Union[bool, Sequence[int]] = False,

@@ -189,6 +189,20 @@ def _total_impl(b: SystemBatch, flow: str) -> TotalCost:
     return TotalCost(re=_re_impl(b, flow), nre=_nre_impl(b))
 
 
+def portfolio_totals(unit_totals, quantities):
+    """Reduce per-unit totals to per-group portfolio costs in-graph.
+
+    ``unit_totals`` is ``(K * S,)`` or ``(K, S)`` per-unit costs of K
+    groups of S systems each (e.g. K candidate portfolios of S SKUs);
+    ``quantities`` is the ``(S,)`` production volume of each group
+    member.  Returns ``(K,)`` USD totals — the portfolio-reduction stage
+    of the fused decode->price->rank pipeline in :mod:`repro.dse`.
+    """
+    q = jnp.asarray(quantities)
+    u = jnp.asarray(unit_totals).reshape(-1, q.shape[0])
+    return (u * q[None, :]).sum(-1)
+
+
 def _register(cls, fields: Tuple[str, ...]):
     jax.tree_util.register_pytree_node(
         cls,

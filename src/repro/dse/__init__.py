@@ -27,22 +27,26 @@ Quickstart::
     res = portfolio_search(space, jax.random.PRNGKey(0))
     print(res.best.label, res.best.portfolio_cost)
 """
-from .space import (ArchChoice, Candidate, DesignSpace, ReuseChoice, SKU,
-                    candidate_systems)
+from .space import (ArchChoice, Candidate, CandidateEncoder, DesignSpace,
+                    EncoderMeta, ReuseChoice, SKU, candidate_systems,
+                    encode_arrays, encode_batch)
 from .evaluate import (CandidateResult, ChunkShape, ChunkedEvaluator,
-                       chunk_shape, evaluate_direct)
+                       EvalArrays, chunk_shape, evaluate_direct)
 from .uncertainty import (SENSITIVITY_PARAMS, Uncertainty, mc_summary,
-                          mc_totals, portfolio_draws, sensitivities)
+                          mc_totals, portfolio_draws, portfolio_risk_stats,
+                          sensitivities)
 from .search import (RiskConfig, SearchResult, exhaustive_search,
                      portfolio_search)
 from .report import (detail_rows, format_table, result_rows, search_summary,
                      to_json)
 
 __all__ = [
-    "ArchChoice", "Candidate", "DesignSpace", "ReuseChoice", "SKU",
-    "candidate_systems", "CandidateResult", "ChunkShape", "ChunkedEvaluator",
-    "chunk_shape", "evaluate_direct", "SENSITIVITY_PARAMS", "Uncertainty",
-    "mc_summary", "mc_totals", "portfolio_draws", "sensitivities",
+    "ArchChoice", "Candidate", "CandidateEncoder", "DesignSpace",
+    "EncoderMeta", "ReuseChoice", "SKU", "candidate_systems",
+    "encode_arrays", "encode_batch", "CandidateResult", "ChunkShape",
+    "ChunkedEvaluator", "EvalArrays", "chunk_shape", "evaluate_direct",
+    "SENSITIVITY_PARAMS", "Uncertainty", "mc_summary", "mc_totals",
+    "portfolio_draws", "portfolio_risk_stats", "sensitivities",
     "RiskConfig", "SearchResult", "exhaustive_search", "portfolio_search",
     "detail_rows", "format_table", "result_rows", "search_summary",
     "to_json",

@@ -1,29 +1,40 @@
-"""Chunked, fixed-shape batched candidate pricing (repro.dse).
+"""Fused, fixed-shape batched candidate pricing (repro.dse).
 
-Arbitrarily long candidate streams are priced through constant-shape
-:class:`~repro.core.batch.SystemBatch` chunks: each chunk holds up to
-``candidates_per_chunk`` candidate portfolios (one ``share_nre`` group
-per candidate, so NRE amortizes within a candidate but never across
-candidates), padded by :func:`~repro.core.batch.pad_batch` to the
-space's worst-case shape signature.  Every chunk therefore hits the same
-compiled :class:`~repro.core.engine.CostEngine` trace — pricing 10k+
-candidates is exactly one retained jit trace per (chunk-shape, flow),
-which ``benchmarks/dse_bench.py`` and ``tests/test_dse.py`` assert via
-``CostEngine.trace_counts()``.
+The hot path is **index-native and on-device**: a chunk of candidate
+*indices* is decoded by :func:`~repro.dse.space.encode_arrays` into a
+padded, NRE-grouped :class:`~repro.core.batch.SystemBatch` *inside* the
+jit graph, priced by the un-jitted
+:class:`~repro.core.engine.CostEngine` implementation, reduced to
+per-candidate portfolio costs (and, optionally, Monte-Carlo risk
+quantiles) in the same graph, and shipped to the host with exactly one
+``jax.device_get`` per chunk.  Pricing 10k+ candidates is one retained
+jit trace per (chunk-shape, flow, mc-config) and zero per-candidate
+Python — the >=30x candidate-throughput path ``benchmarks/dse_bench.py``
+pins.
+
+The original host-packing path (``candidate_systems`` +
+``SystemBatch.from_systems`` + :func:`~repro.core.batch.pad_batch`) is
+retained behind ``fused=False`` as the parity oracle; both paths produce
+chunks with identical array signatures and therefore share one compiled
+engine trace.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from ..core.batch import SystemBatch, pad_batch
-from ..core.engine import CostEngine
-from .space import Candidate, DesignSpace, candidate_systems
-from .uncertainty import mc_totals, portfolio_draws
+from ..core.engine import (CostEngine, TRACE_COUNTS, _re_impl,
+                           portfolio_totals)
+from .space import (Candidate, DesignSpace, EncoderMeta, candidate_systems,
+                    encode_arrays, encoded_nre)
+from .uncertainty import (Uncertainty, mc_re_totals_impl, mc_totals,
+                          portfolio_draws, portfolio_risk_stats)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,7 +65,8 @@ def chunk_shape(space: DesignSpace, candidates_per_chunk: int) -> ChunkShape:
     module instance; chip/module design entities are bounded by the chip
     instances, package entities by S, D2D entities by the process menu.
     Entity tables get one slack row so padded instances always have a
-    zero-NRE row to point at.
+    zero-NRE row to point at.  The vectorized encoder emits exactly this
+    signature, so fused and host-packed chunks share one engine trace.
     """
     k = int(candidates_per_chunk)
     s = len(space.skus)
@@ -71,6 +83,91 @@ def chunk_shape(space: DesignSpace, candidates_per_chunk: int) -> ChunkShape:
         d2d_entities=k * len(space.processes) + 1,
         d2d_instances=k * per_cand_chips,
     )
+
+
+# ---------------------------------------------------------------------------
+# The fused chunk kernels: decode -> price -> portfolio-reduce (-> risk)
+# ---------------------------------------------------------------------------
+
+
+def _fused_totals(tables, idx, *, meta: EncoderMeta, flow: str):
+    """Decode + price one chunk: RE via the engine implementation, NRE via
+    the layout's closed forms (no scatters) — (re, nre, total), each (N,).
+
+    The ONE composition of the fused objective: both the evaluator chunk
+    kernels and the search generation step price through this function
+    (and :func:`_fused_risk_draws` for the Monte-Carlo tail), so their
+    objectives are identical by construction.
+    """
+    batch = encode_arrays(tables, meta, idx)
+    re_tot = _re_impl(batch, flow).total
+    nre_tot = encoded_nre(tables, meta, idx).total
+    return batch, re_tot, nre_tot, re_tot + nre_tot
+
+
+def _fused_risk_draws(batch, nre_tot, qty, mc_key, sig, flow: str,
+                      n_draws: int, n_skus: int):
+    """(draws, K) Monte-Carlo portfolio costs for a priced fused chunk:
+    RE-only scenario draws plus the once-per-batch NRE row (no perturbed
+    parameter enters the NRE model)."""
+    draws = mc_re_totals_impl(batch, mc_key, sig, flow, n_draws) \
+        + nre_tot[None, :]                                   # (draws, K*S)
+    return portfolio_draws(draws, qty, n_skus)
+
+
+def _chunk_impl(tables, idx, qty, *, meta: EncoderMeta, flow: str):
+    TRACE_COUNTS["fused_chunk"] += 1
+    _, re_tot, nre_tot, total = _fused_totals(tables, idx, meta=meta,
+                                              flow=flow)
+    k, s = idx.shape[0], meta.n_skus
+    unit = total.reshape(k, s)
+    return (unit, re_tot.reshape(k, s), nre_tot.reshape(k, s),
+            portfolio_totals(unit, qty))
+
+
+def _chunk_mc_impl(tables, idx, qty, key, sig, *, meta: EncoderMeta,
+                   flow: str, n_draws: int, quantiles: Tuple[float, ...]):
+    TRACE_COUNTS["fused_chunk_mc"] += 1
+    batch, re_tot, nre_tot, total = _fused_totals(tables, idx, meta=meta,
+                                                  flow=flow)
+    k, s = idx.shape[0], meta.n_skus
+    unit = total.reshape(k, s)
+    pf_draws = _fused_risk_draws(batch, nre_tot, qty, key, sig, flow,
+                                 n_draws, s)                 # (draws, K)
+    risk = portfolio_risk_stats(pf_draws, quantiles)
+    return (unit, re_tot.reshape(k, s), nre_tot.reshape(k, s),
+            portfolio_totals(unit, qty), risk)
+
+
+# Module-level jits with tables passed as (pytree) arguments, so every
+# evaluator over a same-shaped space shares one compiled trace.
+_CHUNK_JIT = jax.jit(_chunk_impl, static_argnames=("meta", "flow"))
+_CHUNK_MC_JIT = jax.jit(_chunk_mc_impl,
+                        static_argnames=("meta", "flow", "n_draws",
+                                         "quantiles"))
+
+
+@dataclasses.dataclass
+class EvalArrays:
+    """Struct-of-arrays result of the fused pipeline: one row per
+    candidate index, everything already on the host (single transfer)."""
+
+    idx: np.ndarray               # (K,) candidate indices
+    sku_unit_total: np.ndarray    # (K, S) USD per unit, RE + amortized NRE
+    sku_unit_re: np.ndarray       # (K, S)
+    sku_unit_nre: np.ndarray      # (K, S)
+    portfolio_cost: np.ndarray    # (K,) sum_i quantity_i * unit_total_i
+    risk: Optional[Dict[str, np.ndarray]] = None   # each (K,)
+
+    def __len__(self) -> int:
+        return self.idx.shape[0]
+
+    def objective(self, key: str = "cost") -> np.ndarray:
+        if key == "cost":
+            return self.portfolio_cost
+        if self.risk is None or key not in self.risk:
+            raise KeyError(f"no risk stat {key!r}; evaluate with mc_key set")
+        return self.risk[key]
 
 
 @dataclasses.dataclass
@@ -100,17 +197,26 @@ class ChunkedEvaluator:
     """Prices candidate streams in constant-shape chunks.
 
     >>> ev = ChunkedEvaluator(space, candidates_per_chunk=64)
-    >>> results = ev.evaluate(space.sample(rng, 10_000))
-    >>> ev.systems_per_sec
+    >>> arrays = ev.evaluate_indices(np.arange(10_000))   # fused hot path
+    >>> results = ev.evaluate(space.sample(rng, 100))     # object API
+    >>> ev.candidates_per_sec
+
+    ``fused=True`` (default) runs the on-device pipeline; ``fused=False``
+    keeps the host-packing reference path (same chunk signature, same
+    compiled engine trace — the parity oracle).
     """
 
     def __init__(self, space: DesignSpace, candidates_per_chunk: int = 64,
                  engine: Optional[CostEngine] = None,
-                 flow: str = "chip-last"):
+                 flow: str = "chip-last", fused: bool = True):
         self.space = space
         self.engine = engine or CostEngine()
         self.flow = flow
+        self.fused = bool(fused)
         self.shape = chunk_shape(space, candidates_per_chunk)
+        self.encoder = space.encoder() if self.fused else None
+        self._qty32 = jnp.asarray([sk.quantity for sk in space.skus],
+                                  jnp.float32)
         self.reset_stats()
 
     # -- throughput bookkeeping ---------------------------------------------
@@ -135,9 +241,135 @@ class ChunkedEvaluator:
                 "candidates_per_sec": self.candidates_per_sec,
                 "systems_per_sec": self.systems_per_sec}
 
-    # -- chunk assembly ------------------------------------------------------
+    # -- fused index-native path --------------------------------------------
+    def evaluate_indices(self, idx, mc_key=None, mc_draws: int = 128,
+                         mc_sigmas=None,
+                         mc_quantiles: Sequence[float] = (0.5, 0.9),
+                         ) -> EvalArrays:
+        """Price candidate *indices* through the fused on-device pipeline.
+
+        The stream is cut into constant-shape chunks (the final partial
+        chunk is padded by repeating its first index; padded rows are
+        dropped).  Every chunk is one jitted decode->price->reduce call,
+        dispatched asynchronously; the whole stream then syncs with a
+        single ``jax.device_get`` — no per-chunk (let alone
+        per-candidate) device->host round-trips.  With ``mc_key`` set the
+        same call also returns Monte-Carlo portfolio risk stats computed
+        in-graph under common random numbers (the same key for every
+        chunk).
+        """
+        if not self.fused:
+            raise RuntimeError("evaluate_indices requires fused=True")
+        idx = np.asarray(idx, np.int64)
+        if idx.ndim != 1 or idx.size == 0:
+            raise ValueError("need a 1-D, non-empty index vector")
+        if idx.min() < 0 or idx.max() >= self.space.size():
+            raise IndexError("candidate index out of range")
+        k = self.shape.candidates
+        sig = quantiles = None
+        if mc_key is not None:
+            sig = (mc_sigmas or Uncertainty()).as_array()
+            quantiles = tuple(float(q) for q in mc_quantiles)
+        t0 = time.perf_counter()
+        pending, reals = [], []
+        for lo in range(0, idx.size, k):
+            chunk = idx[lo:lo + k]
+            n_real = chunk.size
+            if n_real < k:
+                chunk = np.concatenate(
+                    [chunk, np.full(k - n_real, chunk[0], chunk.dtype)])
+            dev = jnp.asarray(chunk, jnp.int32)
+            if mc_key is None:
+                out = _CHUNK_JIT(self.encoder.tables, dev, self._qty32,
+                                 meta=self.encoder.meta, flow=self.flow)
+            else:
+                out = _CHUNK_MC_JIT(self.encoder.tables, dev, self._qty32,
+                                    mc_key, sig, meta=self.encoder.meta,
+                                    flow=self.flow, n_draws=int(mc_draws),
+                                    quantiles=quantiles)
+            pending.append(out)
+            reals.append(n_real)
+        host = jax.device_get(pending)          # one sync for the stream
+        self.elapsed_s += time.perf_counter() - t0
+        outs = [jax.tree_util.tree_map(lambda a, nr=nr: a[:nr], o)
+                for o, nr in zip(host, reals)]
+        self.n_candidates += int(sum(reals))
+        self.n_systems += int(sum(reals)) * len(self.space.skus)
+        self.n_chunks += len(reals)
+
+        def cat(i):
+            return np.concatenate([o[i] for o in outs], axis=0)
+
+        risk = None
+        if mc_key is not None:
+            risk = {kk: np.concatenate([o[4][kk] for o in outs], axis=0)
+                    for kk in outs[0][4]}
+        return EvalArrays(idx=idx, sku_unit_total=cat(0), sku_unit_re=cat(1),
+                          sku_unit_nre=cat(2), portfolio_cost=cat(3),
+                          risk=risk)
+
+    def results_from_arrays(self, arrays: EvalArrays,
+                            candidates: Optional[Sequence[Candidate]] = None,
+                            ) -> List[CandidateResult]:
+        """Materialize host :class:`CandidateResult` objects (labels and
+        all) from fused pipeline output — the cold path, meant for
+        winners/reports rather than the full stream."""
+        if candidates is None:
+            candidates = [self.space.candidate_at(int(i))
+                          for i in arrays.idx]
+        names = [sk.name for sk in self.space.skus]
+        out = []
+        for j, cand in enumerate(candidates):
+            risk = None
+            if arrays.risk is not None:
+                risk = {kk: float(v[j]) for kk, v in arrays.risk.items()}
+            out.append(CandidateResult(
+                candidate=cand, label=cand.label(), sku_names=names,
+                sku_unit_total=np.asarray(arrays.sku_unit_total[j],
+                                          np.float64),
+                sku_unit_re=np.asarray(arrays.sku_unit_re[j], np.float64),
+                sku_unit_nre=np.asarray(arrays.sku_unit_nre[j], np.float64),
+                portfolio_cost=float(arrays.portfolio_cost[j]), risk=risk))
+        return out
+
+    # -- object API ----------------------------------------------------------
+    def evaluate(self, candidates: Sequence[Candidate],
+                 mc_key=None, mc_draws: int = 128, mc_sigmas=None,
+                 mc_quantiles: Sequence[float] = (0.5, 0.9),
+                 ) -> List[CandidateResult]:
+        """Price every candidate; optionally attach Monte Carlo risk stats.
+
+        With ``mc_key`` set, each chunk is additionally priced under
+        ``mc_draws`` correlated parameter scenarios (see
+        :mod:`repro.dse.uncertainty`) — the *same* key (common random
+        numbers) is reused for every chunk so candidates are compared
+        under identical scenarios regardless of chunking.
+
+        Candidates that are valid for ``candidate_systems`` but not
+        members of this space's menus cannot be index-encoded; such a
+        stream transparently falls back to the host-packing path.
+        """
+        candidates = list(candidates)
+        if not candidates:
+            return []
+        if self.fused:
+            try:
+                idx = np.asarray([self.space.index_of(c)
+                                  for c in candidates], np.int64)
+            except ValueError:
+                idx = None      # foreign-but-priceable candidates
+            if idx is not None:
+                arrays = self.evaluate_indices(
+                    idx, mc_key=mc_key, mc_draws=mc_draws,
+                    mc_sigmas=mc_sigmas, mc_quantiles=mc_quantiles)
+                return self.results_from_arrays(arrays, candidates)
+        return self._evaluate_legacy(candidates, mc_key, mc_draws,
+                                     mc_sigmas, mc_quantiles)
+
+    # -- legacy host-packing path (parity oracle) ---------------------------
     def pack_chunk(self, chunk: Sequence[Candidate]) -> SystemBatch:
-        """Pack <= candidates_per_chunk candidates into one padded batch."""
+        """Pack <= candidates_per_chunk candidates into one padded batch
+        via the host ``System`` route (reference path)."""
         if len(chunk) > self.shape.candidates:
             raise ValueError(f"chunk of {len(chunk)} exceeds "
                              f"{self.shape.candidates} candidates")
@@ -150,19 +382,8 @@ class ChunkedEvaluator:
                                          max_chips=self.shape.max_chips)
         return pad_batch(batch, **self.shape.pad_kwargs())
 
-    def evaluate(self, candidates: Sequence[Candidate],
-                 mc_key=None, mc_draws: int = 128, mc_sigmas=None,
-                 mc_quantiles: Sequence[float] = (0.5, 0.9),
-                 ) -> List[CandidateResult]:
-        """Price every candidate; optionally attach Monte Carlo risk stats.
-
-        With ``mc_key`` set, each chunk is additionally priced under
-        ``mc_draws`` correlated parameter scenarios (see
-        :mod:`repro.dse.uncertainty`) — the *same* key (common random
-        numbers) is reused for every chunk so candidates are compared
-        under identical scenarios regardless of chunking.
-        """
-        candidates = list(candidates)
+    def _evaluate_legacy(self, candidates, mc_key, mc_draws, mc_sigmas,
+                         mc_quantiles) -> List[CandidateResult]:
         s = len(self.space.skus)
         qty = np.asarray([sk.quantity for sk in self.space.skus], np.float64)
         names = [sk.name for sk in self.space.skus]
@@ -172,16 +393,20 @@ class ChunkedEvaluator:
             chunk = candidates[lo:lo + k]
             t0 = time.perf_counter()
             batch = self.pack_chunk(chunk)
-            tc = jax.device_get(self.engine.total(batch, flow=self.flow))
-            pf_draws = None
+            dev = [self.engine.total(batch, flow=self.flow)]
             if mc_key is not None:
                 draws = mc_totals(batch, mc_key, n_draws=mc_draws,
                                   flow=self.flow, sigmas=mc_sigmas)
                 # fold the real (unpadded) rows into per-candidate
                 # portfolio costs: (draws, len(chunk))
-                pf_draws = np.asarray(jax.device_get(portfolio_draws(
-                    draws[:, :len(chunk) * s], qty, s)), np.float64)
+                dev.append(portfolio_draws(draws[:, :len(chunk) * s],
+                                           qty, s))
+            # every device->host transfer of the chunk in one batched get
+            host = jax.device_get(tuple(dev))
             self.elapsed_s += time.perf_counter() - t0
+            tc = host[0]
+            pf_draws = np.asarray(host[1], np.float64) \
+                if mc_key is not None else None
             total = np.asarray(tc.total, np.float64)
             re_tot = np.asarray(tc.re.total, np.float64)
             nre_tot = np.asarray(tc.nre.total, np.float64)

@@ -5,14 +5,18 @@ portfolio at these volumes?" — optionally under parameter uncertainty,
 where the objective becomes a high quantile of the Monte Carlo portfolio
 cost and the result carries a cost-vs-risk Pareto front.
 
-The loop is a (mu + lambda) evolutionary search with elitism: sample a
-population, price it through the :class:`~repro.dse.evaluate.ChunkedEvaluator`
-(every generation reuses the same compiled chunk trace), keep the elite,
-refill by crossover + mutation, repeat.  All randomness flows from one
-explicit ``jax.random`` PRNG key, so the same key always returns the
-same winner (pinned by ``tests/test_dse.py``); already-priced candidates
-are cached and never re-evaluated.
+The loop is a (mu + lambda) evolutionary search with elitism, and its
+inner iteration is ONE jitted **generation step**: decode the population
+indices (:func:`~repro.dse.space.encode_arrays`), price them with the
+engine, reduce to the (possibly Monte-Carlo-quantile) objective, rank
+with ``lax.top_k``, and breed the next population with vectorized
+index-space crossover + mutation — all in a single retained jit trace
+whose population/objective buffers are donated (where the backend
+supports donation).  The host syncs once per generation for history
+bookkeeping; nothing per-candidate ever crosses the device boundary.
 
+All randomness flows from one explicit ``jax.random`` PRNG key, so the
+same key always returns the same winner (pinned by ``tests/test_dse.py``).
 For brute-forceable spaces, :func:`exhaustive_search` enumerates — the
 cross-check that the evolutionary loop recovers the true optimum.
 """
@@ -22,12 +26,15 @@ import dataclasses
 from typing import Dict, List, Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from ..core.engine import TRACE_COUNTS, portfolio_totals
 from ..core.explorer import pareto_front
-from .evaluate import CandidateResult, ChunkedEvaluator
-from .space import Candidate, DesignSpace
-from .uncertainty import Uncertainty
+from .evaluate import (CandidateResult, ChunkedEvaluator, _fused_risk_draws,
+                       _fused_totals)
+from .space import Candidate, DesignSpace, EncoderMeta
+from .uncertainty import Uncertainty, portfolio_risk_stats
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,13 +76,6 @@ def _front(results: Sequence[CandidateResult], key: str) -> List[Dict]:
     pts = [{"label": r.label, "mean": r.risk["mean"], key: r.risk[key],
             "candidate": r.candidate} for r in results if r.risk]
     return pareto_front(pts, "mean", key)
-
-
-def _rng_from_key(key) -> np.random.Generator:
-    """Derive host-side randomness deterministically from a jax PRNG key."""
-    seed = int(jax.device_get(
-        jax.random.randint(key, (), 0, np.iinfo(np.int32).max)))
-    return np.random.default_rng(seed)
 
 
 def _check_evaluator(space: DesignSpace, flow: str,
@@ -133,6 +133,132 @@ def exhaustive_search(space: DesignSpace,
                         n_evaluated=len(results), objective_key=obj)
 
 
+# ---------------------------------------------------------------------------
+# Vectorized index-space genetic operators (pure jnp, static meta)
+# ---------------------------------------------------------------------------
+
+
+def _digits(i, meta: EncoderMeta, pows):
+    """(n,) arch index -> (n, S) per-SKU choice digits (SKU 0 is most
+    significant), garbage-but-bounded for reuse indices (callers mask)."""
+    safe = jnp.where(i >= meta.n_arch, 0, i)
+    return (safe[:, None] // pows[None, :]) % meta.n_arch_choices
+
+
+def _compose(digits, pows):
+    return (digits * pows[None, :]).sum(-1).astype(jnp.int32)
+
+
+def _crossover_vec(key, ia, ib, meta: EncoderMeta, pows):
+    """Per-SKU uniform crossover of two index vectors; any reuse parent
+    passes through (mutation supplies reuse-family exploration)."""
+    picks = jax.random.bernoulli(key, 0.5, ia.shape + (meta.n_skus,))
+    d = jnp.where(picks, _digits(ia, meta, pows), _digits(ib, meta, pows))
+    either_reuse = (ia >= meta.n_arch) | (ib >= meta.n_arch)
+    return jnp.where(either_reuse, ia, _compose(d, pows))
+
+
+def _mutate_vec(key, i, meta: EncoderMeta, pows, jump_prob: float):
+    """Random neighbor in index space, mirroring ``DesignSpace.mutate``:
+    occasionally jump anywhere; reuse candidates hop within the reuse
+    family (p=0.7) or back to the arch family; arch candidates hop into
+    the reuse family (p=0.15) or tweak one SKU's digit."""
+    n = i.shape[0]
+    a, r, s = meta.n_arch_choices, meta.n_reuse_choices, meta.n_skus
+    (k_jump, k_jto, k_rbranch, k_abranch, k_hop, k_back, k_sku, k_delta,
+     k_rto) = jax.random.split(key, 9)
+
+    is_reuse = i >= meta.n_arch
+    # -- reuse family: hop to a different reuse choice or leave ------------
+    if r > 1:
+        ri = jnp.clip(i - meta.n_arch, 0, r - 1)
+        r2 = (ri + 1 + jax.random.randint(k_hop, (n,), 0, r - 1)) % r
+        back = jax.random.randint(k_back, (n,), 0, meta.n_arch)
+        reuse_next = jnp.where(
+            jax.random.uniform(k_rbranch, (n,)) < 0.7,
+            meta.n_arch + r2, back)
+    else:
+        reuse_next = jax.random.randint(k_back, (n,), 0, meta.n_arch)
+
+    # -- arch family: hop into reuse or tweak one SKU digit ----------------
+    d = _digits(i, meta, pows)
+    sku = jax.random.randint(k_sku, (n,), 0, s)
+    delta = jax.random.randint(k_delta, (n,), 1, max(a, 2))
+    row = jnp.arange(n)
+    d2 = d.at[row, sku].set((d[row, sku] + delta) % a)
+    arch_next = _compose(d2, pows)
+    if r > 0:
+        to_reuse = meta.n_arch + jax.random.randint(k_rto, (n,), 0, r)
+        arch_next = jnp.where(
+            jax.random.uniform(k_abranch, (n,)) < 0.15, to_reuse, arch_next)
+
+    out = jnp.where(is_reuse, reuse_next, arch_next)
+    jump = jax.random.uniform(k_jump, (n,)) < jump_prob
+    return jnp.where(jump,
+                     jax.random.randint(k_jto, (n,), 0, meta.size), out)
+
+
+# ---------------------------------------------------------------------------
+# The fused generation step: price -> rank -> breed, one jit trace
+# ---------------------------------------------------------------------------
+
+
+def _gen_step_impl(tables, key, pop, qty, mc_key, sig, *, meta: EncoderMeta,
+                   flow: str, population: int, elite: int,
+                   jump_prob: float, n_draws: int, quantile: float):
+    TRACE_COUNTS["gen_step"] += 1
+    # the same fused decode->price composition the evaluator chunks use,
+    # so the step's objective and the final ranking sweep agree exactly
+    batch, _, nre_tot, total = _fused_totals(tables, pop, meta=meta,
+                                             flow=flow)
+    if n_draws:
+        pf_draws = _fused_risk_draws(batch, nre_tot, qty, mc_key, sig,
+                                     flow, n_draws, meta.n_skus)
+        obj = portfolio_risk_stats(pf_draws, (quantile,))[
+            f"q{int(round(quantile * 100))}"]
+    else:
+        obj = portfolio_totals(total, qty)
+
+    # deterministic ranking: objective, position-stable on exact ties
+    neg, order = jax.lax.top_k(-obj, elite)
+    elite_idx = pop[order]
+    elite_obj = -neg
+
+    n_child = population - elite
+    pows = tables["digit_pow"]      # the encoder's mixed-radix layout
+    kpa, kpb, kx, kmut, kgate = jax.random.split(key, 5)
+    pa = elite_idx[jax.random.randint(kpa, (n_child,), 0, elite)]
+    pb = elite_idx[jax.random.randint(kpb, (n_child,), 0, elite)]
+    child = _crossover_vec(kx, pa, pb, meta, pows)
+    mutated = _mutate_vec(kmut, child, meta, pows, jump_prob)
+    child = jnp.where(jax.random.bernoulli(kgate, 0.8, (n_child,)),
+                      mutated, child)
+    next_pop = jnp.concatenate([elite_idx, child])
+    # `pop` is returned (aliasing its donated buffer) so the host can read
+    # the priced generation without holding the pre-donation reference.
+    return pop, next_pop, elite_idx[0], elite_obj[0]
+
+
+# One module-level jit; the population buffer is donated so the
+# generation loop recycles device memory (donation is a no-op on backends
+# like CPU that do not implement it — gated to keep the warning away).
+# Built lazily: jax.default_backend() initializes the backend, which must
+# not happen as an import side effect.
+_GEN_STEP = None
+
+
+def _gen_step():
+    global _GEN_STEP
+    if _GEN_STEP is None:
+        donate = (2,) if jax.default_backend() != "cpu" else ()
+        _GEN_STEP = jax.jit(
+            _gen_step_impl,
+            static_argnames=("meta", "flow", "population", "elite",
+                             "jump_prob", "n_draws", "quantile"),
+            donate_argnums=donate)
+    return _GEN_STEP
+
+
 def portfolio_search(space: DesignSpace, key, *,
                      population: int = 32, generations: int = 12,
                      elite: int = 6, jump_prob: float = 0.15,
@@ -144,57 +270,67 @@ def portfolio_search(space: DesignSpace, key, *,
     ``risk=RiskConfig(...)`` switches the objective from nominal
     portfolio cost to the configured Monte Carlo quantile (common random
     numbers across all candidates, derived from ``key``).
+
+    Every generation is one jitted step (decode + price + rank + breed on
+    device); the trace is retained across generations and across
+    same-shaped searches, which ``tests/test_fused.py`` pins via
+    ``TRACE_COUNTS['gen_step']``.
     """
     if elite < 1 or elite > population:
         raise ValueError("need 1 <= elite <= population")
-    rng = _rng_from_key(key)
     ev = _check_evaluator(space, flow, evaluator) if evaluator \
         else ChunkedEvaluator(space, candidates_per_chunk=min(population, 64),
                               flow=flow)
+    enc = space.encoder()
+    qty = jnp.asarray([sk.quantity for sk in space.skus], jnp.float32)
     obj = "cost"
-    ev_kw = {}
+    ev_kw: Dict = {}
+    n_draws, quantile = 0, 0.5
+    mc_key, sig = key, jnp.zeros((4,), jnp.float32)  # placeholders
     if risk is not None:
         obj = risk.objective_key
-        ev_kw = _mc_kwargs(risk, _default_mc_key(key))
+        mc_key = _default_mc_key(key)
+        sig = risk.sigmas.as_array()
+        n_draws, quantile = int(risk.n_draws), float(risk.quantile)
+        ev_kw = _mc_kwargs(risk, mc_key)
 
-    seen: Dict[Candidate, CandidateResult] = {}
+    k_init, k_loop = jax.random.split(key)
+    pop = jax.random.randint(k_init, (population,), 0, space.size(),
+                             dtype=jnp.int32)
+    step = _gen_step()
+    seen: set = set()
     history: List[Dict] = []
-
-    def price(cands: Sequence[Candidate]):
-        fresh = []
-        for c in cands:
-            if c not in seen and c not in fresh:
-                fresh.append(c)
-        for r in ev.evaluate(fresh, **ev_kw):
-            seen[r.candidate] = r
-
-    pop = space.sample(rng, population)
+    best_obj, best_idx = np.inf, -1
     for gen in range(generations):
-        price(pop)
-        ranked_pop = _rank([seen[c] for c in set(pop)], obj)
-        elites = ranked_pop[:elite]
-        best_all = _rank(list(seen.values()), obj)[0]
-        history.append({"generation": gen, "evaluated": len(seen),
-                        "best_objective": best_all.objective(obj),
-                        "best_label": best_all.label,
-                        "gen_best": ranked_pop[0].objective(obj)})
-        if gen == generations - 1:
-            break
-        next_pop = [r.candidate for r in elites]
-        guard = 0
-        while len(next_pop) < population:
-            pa = elites[int(rng.integers(len(elites)))].candidate
-            pb = elites[int(rng.integers(len(elites)))].candidate
-            child = space.crossover(rng, pa, pb)
-            if rng.random() < 0.8:
-                child = space.mutate(rng, child, jump_prob=jump_prob)
-            guard += 1
-            if child in next_pop and guard < 10 * population:
-                continue
-            next_pop.append(child)
-        pop = next_pop
+        k_loop, k_gen = jax.random.split(k_loop)
+        pop_out, pop_next, gen_idx, gen_obj = step(
+            enc.tables, k_gen, pop, qty, mc_key, sig, meta=enc.meta,
+            flow=flow, population=population, elite=elite,
+            jump_prob=float(jump_prob), n_draws=n_draws, quantile=quantile)
+        # one host sync per generation: the priced population + gen best
+        pop_h, gen_idx, gen_obj = jax.device_get(
+            (pop_out, gen_idx, gen_obj))
+        seen.update(int(i) for i in pop_h)
+        if float(gen_obj) < best_obj:
+            best_obj, best_idx = float(gen_obj), int(gen_idx)
+        history.append({
+            "generation": gen,
+            "evaluated": len(seen),
+            "best_objective": best_obj,
+            "best_label": space.candidate_at(best_idx).label(),
+            "gen_best": float(gen_obj)})
+        pop = pop_next
 
-    ranked = _rank(list(seen.values()), obj)
+    # materialize every distinct priced candidate through the fused
+    # evaluator (same engine graph => identical objectives), rank on host
+    uniq = np.asarray(sorted(seen), np.int64)
+    if ev.fused:
+        arrays = ev.evaluate_indices(uniq, **ev_kw)
+        results = ev.results_from_arrays(arrays)
+    else:
+        results = ev.evaluate([space.candidate_at(int(i)) for i in uniq],
+                              **ev_kw)
+    ranked = _rank(results, obj)
     return SearchResult(best=ranked[0], ranked=ranked,
                         pareto=_front(ranked, obj), history=history,
-                        n_evaluated=len(seen), objective_key=obj)
+                        n_evaluated=len(results), objective_key=obj)

@@ -24,10 +24,13 @@ from __future__ import annotations
 import dataclasses
 import functools
 import itertools
-from typing import Iterator, List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
+from ..core.batch import SystemBatch
+from ..core.engine import NREBreakdown
 from ..core.reuse import portfolio_reuse_systems
 from ..core.system import System, spec
 from ..core.technology import node, tech
@@ -285,6 +288,42 @@ class DesignSpace:
             m = max(m, max(self.reuse_counts(r)))
         return m
 
+    # -- index algebra (inverse of candidate_at) ----------------------------
+    @functools.cached_property
+    def _arch_index(self) -> Dict[ArchChoice, int]:
+        return {a: i for i, a in enumerate(self._arch_choices)}
+
+    @functools.cached_property
+    def _reuse_index(self) -> Dict[ReuseChoice, int]:
+        return {r: i for i, r in enumerate(self._reuse_choices)}
+
+    def index_of(self, cand: Candidate) -> int:
+        """The unique index with ``candidate_at(index_of(c)) == c`` — the
+        bridge from candidate objects to the array-native fused pipeline."""
+        try:
+            if cand.reuse is not None:
+                return (len(self._arch_choices) ** len(self.skus)
+                        + self._reuse_index[cand.reuse])
+            if len(cand.choices) != len(self.skus):
+                raise KeyError(cand)
+            i = 0
+            base = len(self._arch_choices)
+            for c in cand.choices:       # SKU 0 is the most significant digit
+                i = i * base + self._arch_index[c]
+            return i
+        except KeyError:
+            raise ValueError(
+                f"candidate {cand.label()} is not a member of this "
+                "design space") from None
+
+    def encoder(self) -> "CandidateEncoder":
+        """The cached vectorized candidate encoder for this space."""
+        return self._encoder
+
+    @functools.cached_property
+    def _encoder(self) -> "CandidateEncoder":
+        return CandidateEncoder(self)
+
 
 def candidate_systems(space: DesignSpace, cand: Candidate) -> List[System]:
     """Lower one candidate to its per-SKU :class:`System` group.
@@ -320,3 +359,341 @@ def candidate_systems(space: DesignSpace, cand: Candidate) -> List[System]:
                              "quantity": sku.quantity,
                              "reuse_chiplet": space.reuse_within_sku}))
     return out
+
+
+# ---------------------------------------------------------------------------
+# Vectorized candidate encoder — the on-device half of candidate_systems.
+# ---------------------------------------------------------------------------
+
+# Per-(SKU, extended choice) float tables the encoder gathers from.  Every
+# value is read off the *actual* System objects candidate_systems builds
+# (same float64 -> float32 cast as SystemBatch.from_systems), so the
+# encoded batch is bit-identical to the host-packed one.
+_CHOICE_TABLE_FIELDS = (
+    # chip slots
+    "n_chips", "chip_area", "mod_area", "chip_defect", "wafer_cost",
+    "cluster", "wafer_yield", "sort_cost", "bump_cost",
+    # chip/module NRE coefficients
+    "nre_chip_k", "nre_chip_fixed", "nre_mod_k",
+    # D2D interface
+    "has_d2d", "d2d_pidx",
+    # per-system / package
+    "package_area", "package_area_factor", "substrate_cost",
+    "substrate_layer", "interposer_cost", "interposer_defect",
+    "interposer_area_factor", "interposer_cluster", "y2_chip_bond",
+    "y3_substrate_bond", "assembly_yield", "bond_cost_per_chip",
+    "pkg_k", "pkg_fixed",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderMeta:
+    """Static (hashable) geometry of a space's encoder — the part of the
+    encoding that participates in jit cache keys."""
+
+    n_skus: int
+    max_chips: int
+    n_arch_choices: int      # A: per-SKU architecture menu size
+    n_reuse_choices: int     # R: cross-SKU reuse candidates
+    n_processes: int         # P: D2D entity namespace width per candidate
+    n_arch: int              # A ** n_skus (first reuse index)
+    size: int                # total candidate count
+    reuse_within_sku: bool
+
+
+class CandidateEncoder:
+    """Pure-array lowering of candidate *indices* to a :class:`SystemBatch`.
+
+    Construction walks every (SKU, architecture choice) and every reuse
+    choice ONCE through :func:`candidate_systems` (the parity oracle) and
+    records the resulting per-system / per-chip floats in dense
+    ``(S, A + R)`` tables.  :meth:`encode` is then pure ``jnp``: decoding
+    a ``(K,)`` index vector into a padded, NRE-grouped ``(K * S)``-system
+    batch is all gathers and broadcasts, traceable inside an outer jit —
+    zero per-candidate Python, which is what moves the DSE inner loop
+    on-device (see :mod:`repro.dse.evaluate` / ``search``).
+
+    The NRE entity layout is canonical rather than discovery-ordered:
+    candidate ``j`` owns chip/module entity rows ``1 + j*S*C .. ``,
+    package rows ``1 + j*S ..`` and D2D rows ``1 + j*P ..`` (row 0 of
+    every table is a shared zero-NRE sink for padded slots).  Shapes
+    match :func:`repro.dse.evaluate.chunk_shape` exactly, so encoded and
+    host-packed chunks share one compiled engine trace.
+    """
+
+    def __init__(self, space: DesignSpace):
+        if space.size() > np.iinfo(np.int32).max:
+            raise ValueError(
+                f"space has {space.size()} candidates; the int32 index "
+                "encoding supports at most 2**31 - 1")
+        self.space = space
+        s, c = len(space.skus), space.max_chips()
+        a, r = len(space._arch_choices), len(space._reuse_choices)
+        p = len(space.processes)
+        self.meta = EncoderMeta(
+            n_skus=s, max_chips=c, n_arch_choices=a, n_reuse_choices=r,
+            n_processes=p, n_arch=a ** s, size=space.size(),
+            reuse_within_sku=space.reuse_within_sku)
+
+        tab = {f: np.zeros((s, a + r), np.float32)
+               for f in _CHOICE_TABLE_FIELDS}
+        pkg_shared = np.zeros((a + r,), np.float32)
+        for e in range(a + r):
+            if e < a:
+                cand = Candidate(choices=(space._arch_choices[e],) * s)
+            else:
+                ch = space._reuse_choices[e - a]
+                pkg_shared[e] = 1.0 if ch.package_reuse else 0.0
+                cand = Candidate(reuse=ch)
+            for i, sys in enumerate(candidate_systems(space, cand)):
+                self._fill(tab, i, e, sys)
+        self.tables: Dict[str, jnp.ndarray] = {
+            k: jnp.asarray(v) for k, v in tab.items()}
+        self.tables["pkg_shared"] = jnp.asarray(pkg_shared)
+        # static per-process D2D NRE menu (row values are candidate-free)
+        self.tables["d2d_nre"] = jnp.asarray(
+            [node(p_).nre_d2d for p_ in space.processes], jnp.float32)
+        self.tables["quantity"] = jnp.asarray(
+            [sk.quantity for sk in space.skus], jnp.float32)
+        # mixed-radix digit extractors, SKU 0 most significant
+        self.tables["digit_pow"] = jnp.asarray(
+            [a ** (s - 1 - i) for i in range(s)], jnp.int32)
+
+    def _fill(self, tab, i: int, e: int, sys: System):
+        chip = sys.chips[0]
+        for other in sys.chips[1:]:     # even slices / reuse copies only
+            if (other.area_mm2 != chip.area_mm2
+                    or other.process != chip.process):
+                raise ValueError(
+                    f"encoder requires homogeneous chips per system; "
+                    f"{sys.name} mixes designs")
+        nd, t = chip.node, sys.tech
+        d2d = [m for m in chip.modules if m.is_d2d]
+        v = {
+            "n_chips": sys.n_chips, "chip_area": chip.area_mm2,
+            "mod_area": chip.module_area_mm2,
+            "chip_defect": chip.defect_density,
+            "wafer_cost": nd.wafer_cost, "cluster": nd.cluster_param,
+            "wafer_yield": nd.wafer_yield, "sort_cost": nd.wafer_sort_cost,
+            "bump_cost": nd.bump_cost_per_mm2,
+            "nre_chip_k": nd.nre_chip_per_mm2,
+            "nre_chip_fixed": nd.nre_fixed_per_chip,
+            "nre_mod_k": nd.nre_module_per_mm2,
+            "has_d2d": 1.0 if d2d else 0.0,
+            "d2d_pidx": (self.space.processes.index(chip.process)
+                         if d2d else 0),
+            "package_area": sys.package_area,
+            "package_area_factor": t.package_area_factor,
+            "substrate_cost": t.substrate_cost_per_mm2,
+            "substrate_layer": t.substrate_layer_factor,
+            "interposer_cost": t.interposer_cost_per_mm2,
+            "interposer_defect": t.interposer_defect_density,
+            "interposer_area_factor": t.interposer_area_factor,
+            "interposer_cluster": node(t.interposer_node).cluster_param,
+            "y2_chip_bond": t.y2_chip_bond,
+            "y3_substrate_bond": t.y3_substrate_bond,
+            "assembly_yield": t.assembly_yield,
+            "bond_cost_per_chip": t.bond_cost_per_chip,
+            "pkg_k": t.nre_package_per_mm2,
+            "pkg_fixed": t.nre_fixed_per_package,
+        }
+        for k, val in v.items():
+            tab[k][i, e] = val
+
+    def encode(self, idx) -> SystemBatch:
+        """Lower a ``(K,)`` int vector of candidate indices to a padded
+        ``SystemBatch`` (one NRE group per candidate) — pure jnp."""
+        return encode_arrays(self.tables, self.meta, idx)
+
+
+def _decode(tables: Dict[str, jnp.ndarray], meta: EncoderMeta, idx):
+    """Shared index decode: (K,) indices -> (is_reuse (K,), ext (K, S))
+    where ``ext`` is each SKU's extended-choice column (arch digit, or
+    ``A + r`` for reuse candidates)."""
+    a = meta.n_arch_choices
+    idx = jnp.asarray(idx, jnp.int32)
+    is_reuse = idx >= meta.n_arch                                    # (K,)
+    arch_i = jnp.where(is_reuse, 0, idx)
+    digits = (arch_i[:, None] // tables["digit_pow"][None, :]) % a   # (K,S)
+    r = jnp.where(is_reuse, idx - meta.n_arch, 0)
+    ext = jnp.where(is_reuse[:, None], a + r[:, None], digits)       # (K,S)
+    return is_reuse, ext
+
+
+def encode_arrays(tables: Dict[str, jnp.ndarray], meta: EncoderMeta,
+                  idx) -> SystemBatch:
+    """Pure-array candidate decode (traceable; see :class:`CandidateEncoder`).
+
+    ``tables`` may be traced or concrete; ``meta`` is static.  Out-of-range
+    indices are undefined behavior (clipped gathers), mirroring
+    ``candidate_at``'s host-side range check which callers enforce.
+    """
+    s, c, p = meta.n_skus, meta.max_chips, meta.n_processes
+    is_reuse, ext = _decode(tables, meta, idx)
+    k = ext.shape[0]
+    n = k * s
+
+    srange = jnp.arange(s, dtype=jnp.int32)
+
+    def g(name):
+        """(K, S) per-system gather, flattened to (N,)."""
+        return tables[name][srange[None, :], ext].reshape(n)
+
+    n_chips = g("n_chips")
+    mask = (jnp.arange(c, dtype=jnp.float32)[None, :]
+            < n_chips[:, None]).astype(jnp.float32)                  # (N,C)
+
+    def chip(name, pad=0.0):
+        val = g(name)[:, None] * mask
+        return val if pad == 0.0 else val + pad * (1.0 - mask)
+
+    # -- canonical NRE entity layout (see class docstring) -----------------
+    sys_i = jnp.arange(n, dtype=jnp.int32)
+    cand_of_sys = sys_i // s
+    is_reuse_sys = jnp.repeat(is_reuse, s)
+    slot = jnp.arange(c, dtype=jnp.int32)[None, :]
+    own_row = 1 + (sys_i * c)[:, None] + slot                        # (N,C)
+    sku_row = 1 + (sys_i * c)[:, None] + 0 * slot
+    cand_row = 1 + (cand_of_sys * (s * c))[:, None] + 0 * slot
+    arch_row = sku_row if meta.reuse_within_sku else own_row
+    chip_ids = jnp.where(mask > 0.0,
+                         jnp.where(is_reuse_sys[:, None], cand_row,
+                                   arch_row), 0).astype(jnp.int32)
+
+    def ent(values_2d):
+        """Prefix a zero sink row and flatten (N, C) slot values."""
+        return jnp.concatenate(
+            [jnp.zeros((1,), jnp.float32), values_2d.reshape(-1)])
+
+    pkg_shared = (tables["pkg_shared"][ext[:, 0]] > 0.0)             # (K,)
+    pkg_shared_sys = jnp.repeat(pkg_shared, s)
+    pkg_ids = jnp.where(pkg_shared_sys, 1 + cand_of_sys * s,
+                        1 + sys_i).astype(jnp.int32)
+
+    inst_sys = jnp.repeat(sys_i, c)                                  # (N*C,)
+    has_d2d = (g("has_d2d")[:, None] * mask) > 0.0
+    d2d_ids = jnp.where(
+        has_d2d,
+        1 + (cand_of_sys * p)[:, None] + g("d2d_pidx").astype(jnp.int32)[
+            :, None] + 0 * slot,
+        0).astype(jnp.int32)
+
+    quantity = jnp.tile(tables["quantity"], k)
+    zero1 = jnp.zeros((1,), jnp.float32)
+    return SystemBatch.from_arrays(
+        chip_area=chip("chip_area"),
+        chip_defect=chip("chip_defect"),
+        chip_wafer_cost=chip("wafer_cost"),
+        chip_cluster=chip("cluster", pad=1.0),
+        chip_wafer_yield=chip("wafer_yield", pad=1.0),
+        chip_sort_cost=chip("sort_cost"),
+        chip_bump_cost=chip("bump_cost"),
+        chip_mask=mask,
+        package_area=g("package_area"),
+        package_area_factor=g("package_area_factor"),
+        substrate_cost=g("substrate_cost"),
+        substrate_layer=g("substrate_layer"),
+        interposer_cost=g("interposer_cost"),
+        interposer_defect=g("interposer_defect"),
+        interposer_area_factor=g("interposer_area_factor"),
+        interposer_cluster=g("interposer_cluster"),
+        y2_chip_bond=g("y2_chip_bond"),
+        y3_substrate_bond=g("y3_substrate_bond"),
+        assembly_yield=g("assembly_yield"),
+        bond_cost_per_chip=g("bond_cost_per_chip"),
+        quantity=quantity,
+        chip_entity_id=chip_ids,
+        chip_entity_area=ent(chip("chip_area")),
+        chip_entity_k=ent(chip("nre_chip_k")),
+        chip_entity_fixed=ent(chip("nre_chip_fixed")),
+        pkg_entity_id=pkg_ids,
+        pkg_entity_area=jnp.concatenate([zero1, g("package_area")]),
+        pkg_entity_k=jnp.concatenate([zero1, g("pkg_k")]),
+        pkg_entity_fixed=jnp.concatenate([zero1, g("pkg_fixed")]),
+        mod_sys=inst_sys,
+        mod_entity=chip_ids.reshape(-1),
+        mod_entity_area=ent(chip("mod_area")),
+        mod_entity_k=ent(chip("nre_mod_k")),
+        d2d_sys=inst_sys,
+        d2d_entity=d2d_ids.reshape(-1),
+        d2d_entity_nre=jnp.concatenate([zero1,
+                                        jnp.tile(tables["d2d_nre"], k)]),
+    )
+
+
+def encode_batch(space: DesignSpace, idx) -> SystemBatch:
+    """Vectorized ``candidate_at`` + ``candidate_systems`` + packing: turn
+    a ``(K,)`` vector of candidate indices into the padded, NRE-grouped
+    :class:`SystemBatch` the engine prices — entirely in array ops, so it
+    composes with an outer ``jax.jit`` (the fused DSE pipeline)."""
+    return space.encoder().encode(idx)
+
+
+def encoded_nre(tables: Dict[str, jnp.ndarray], meta: EncoderMeta,
+                idx) -> NREBreakdown:
+    """Closed-form per-unit NRE for encoder-canonical candidate batches.
+
+    The generic engine amortizes design entities with ``segment_sum``
+    scatters — correct for arbitrary batches, but scatter-adds serialize
+    on CPU and dominate the sweep wall-clock.  The encoder's canonical
+    layout makes every Eq. (6)-(8) denominator *closed-form*:
+
+    * within-SKU sharing: the SKU's ``n`` chips (and module instances)
+      share one design over ``q * n`` uses -> per-unit ``NRE_e / q``
+      (``reuse_within_sku=False``: ``n`` distinct designs, ``n*NRE_e/q``);
+    * cross-SKU reuse: one design over ``sum_s q_s * n_s`` uses;
+    * packages: own design over ``q`` (shared: over ``sum_s q_s``);
+    * D2D: one interface per (candidate, process) over the
+      ``q_s * n_s`` of the SKUs that use it (a one-hot reduce over the
+      P-wide process menu, not a scatter).
+
+    Returns the engine's :class:`~repro.core.engine.NREBreakdown` with
+    ``(K * S,)`` fields, matching ``CostEngine.nre`` on the same encoded
+    batch to float32 rounding (pinned <= 1e-6 relative by
+    ``tests/test_fused.py``) — the fused pipeline's NRE stage.
+    """
+    s, p = meta.n_skus, meta.n_processes
+    eps = jnp.float32(1e-30)
+    is_reuse, ext = _decode(tables, meta, idx)
+    k = ext.shape[0]
+    srange = jnp.arange(s, dtype=jnp.int32)
+
+    def g(name):                                     # (K, S) gathers
+        return tables[name][srange[None, :], ext]
+
+    q = jnp.broadcast_to(tables["quantity"][None, :], (k, s))
+    n = g("n_chips")
+    reuse_col = is_reuse[:, None]
+
+    # chip + module designs (Eq. 7/8)
+    chip_nre = g("nre_chip_k") * g("chip_area") + g("nre_chip_fixed")
+    mod_nre = g("nre_mod_k") * g("mod_area")
+    denom_c = jnp.maximum((q * n).sum(-1, keepdims=True), eps)
+    mult = 1.0 if meta.reuse_within_sku else n
+    chips = jnp.where(reuse_col, n * chip_nre / denom_c,
+                      mult * chip_nre / jnp.maximum(q, eps))
+    modules = jnp.where(reuse_col, n * mod_nre / denom_c,
+                        mult * mod_nre / jnp.maximum(q, eps))
+
+    # package designs: own per system unless the reuse scheme shares one
+    pkg_nre = g("pkg_k") * g("package_area") + g("pkg_fixed")
+    shared = tables["pkg_shared"][ext] > 0.0
+    denom_p = jnp.maximum(q.sum(-1, keepdims=True), eps)
+    packages = jnp.where(shared, pkg_nre / denom_p,
+                         pkg_nre / jnp.maximum(q, eps))
+
+    # D2D interfaces: one per (candidate, process) across the candidate
+    has = g("has_d2d")
+    pidx = g("d2d_pidx").astype(jnp.int32)
+    w = has * q * n                                          # (K, S) uses
+    onehot = (pidx[:, :, None]
+              == jnp.arange(p, dtype=jnp.int32)[None, None, :])
+    denom_d = (w[:, :, None] * onehot).sum(1)                # (K, P)
+    den_sys = jnp.take_along_axis(denom_d, pidx, axis=1)     # (K, S)
+    d2d = has * n * tables["d2d_nre"][pidx] / jnp.maximum(den_sys, eps)
+
+    flat = k * s
+    return NREBreakdown(modules=modules.reshape(flat),
+                        chips=chips.reshape(flat),
+                        packages=packages.reshape(flat),
+                        d2d=d2d.reshape(flat))

@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.batch import SystemBatch
-from ..core.engine import TRACE_COUNTS, _total_impl
+from ..core.engine import TRACE_COUNTS, _re_impl, _total_impl
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,32 +55,58 @@ class Uncertainty:
                            jnp.float32)
 
 
+def perturb_batch(batch: SystemBatch, key, sig,
+                  correlated: bool = True) -> SystemBatch:
+    """One sampled parameter scenario: lognormal multipliers on the
+    uncertain RE parameters (median-preserving; yields perturbed via
+    their failure rates so they stay in (0, 1])."""
+    kd, kw, kb, ks, ki = jax.random.split(key, 5)
+
+    def mult(kk, like, s):
+        shape = () if correlated else like.shape
+        return jnp.exp(s * jax.random.normal(kk, shape))
+
+    def fail(kk, y, s):
+        # perturb the failure rate so yields stay in (0, 1]
+        return jnp.clip(1.0 - (1.0 - y) * mult(kk, y, s), 1e-3, 1.0)
+
+    return batch.replace(
+        chip_defect=batch.chip_defect * mult(kd, batch.chip_defect,
+                                             sig[0]),
+        chip_wafer_cost=batch.chip_wafer_cost
+        * mult(kw, batch.chip_wafer_cost, sig[1]),
+        y2_chip_bond=fail(kb, batch.y2_chip_bond, sig[2]),
+        y3_substrate_bond=fail(ks, batch.y3_substrate_bond, sig[2]),
+        interposer_defect=batch.interposer_defect
+        * mult(ki, batch.interposer_defect, sig[3]),
+    )
+
+
 def _mc_impl(batch: SystemBatch, key, sig, flow: str, n_draws: int,
              correlated: bool):
     TRACE_COUNTS["mc"] += 1
 
     def one(k):
-        kd, kw, kb, ks, ki = jax.random.split(k, 5)
+        return _total_impl(perturb_batch(batch, k, sig, correlated),
+                           flow).total
 
-        def mult(kk, like, s):
-            shape = () if correlated else like.shape
-            return jnp.exp(s * jax.random.normal(kk, shape))
+    return jax.vmap(one)(jax.random.split(key, n_draws))
 
-        def fail(kk, y, s):
-            # perturb the failure rate so yields stay in (0, 1]
-            return jnp.clip(1.0 - (1.0 - y) * mult(kk, y, s), 1e-3, 1.0)
 
-        b = batch.replace(
-            chip_defect=batch.chip_defect * mult(kd, batch.chip_defect,
-                                                 sig[0]),
-            chip_wafer_cost=batch.chip_wafer_cost
-            * mult(kw, batch.chip_wafer_cost, sig[1]),
-            y2_chip_bond=fail(kb, batch.y2_chip_bond, sig[2]),
-            y3_substrate_bond=fail(ks, batch.y3_substrate_bond, sig[2]),
-            interposer_defect=batch.interposer_defect
-            * mult(ki, batch.interposer_defect, sig[3]),
-        )
-        return _total_impl(b, flow).total
+def mc_re_totals_impl(batch: SystemBatch, key, sig, flow: str,
+                      n_draws: int, correlated: bool = True):
+    """(n_draws, N) *RE-only* totals under sampled scenarios (un-jitted,
+    composable inside a caller's graph).
+
+    None of the perturbed parameters enters the NRE model, so the fused
+    pipeline prices uncertainty as ``re_draws + nre[None, :]`` — the
+    amortization (and its segment sums or closed forms) runs once per
+    batch instead of once per draw."""
+    TRACE_COUNTS["mc_re"] += 1
+
+    def one(k):
+        return _re_impl(perturb_batch(batch, k, sig, correlated),
+                        flow).total
 
     return jax.vmap(one)(jax.random.split(key, n_draws))
 
@@ -155,6 +181,23 @@ def portfolio_draws(draws, quantities, n_skus: int):
     q = jnp.asarray(quantities, d.dtype)
     return (d[:, :n * n_skus].reshape(d.shape[0], n, n_skus)
             * q[None, None, :]).sum(-1)
+
+
+def portfolio_risk_stats(pf_draws, quantiles: Sequence[float]
+                         ) -> Dict[str, jnp.ndarray]:
+    """In-graph reduction of (draws, K) portfolio costs to per-candidate
+    risk stats (mean/std + requested quantiles), each a (K,) array.
+
+    This is the Monte-Carlo tail of the fused DSE pipeline: the quantile
+    objective is computed on-device inside the same jit as candidate
+    decode + pricing, so risk-aware search never ships the draw matrix to
+    the host (see :mod:`repro.dse.evaluate` / ``search``)."""
+    pf = jnp.asarray(pf_draws)
+    out = {"mean": pf.mean(axis=0), "std": pf.std(axis=0)}
+    qs = jnp.quantile(pf, jnp.asarray(list(quantiles)), axis=0)
+    for i, q in enumerate(quantiles):
+        out[f"q{int(round(q * 100))}"] = qs[i]
+    return out
 
 
 def trace_counts() -> Dict[str, int]:
