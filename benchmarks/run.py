@@ -15,7 +15,7 @@ def main() -> None:
     from . import (ablations, codesign, dse_bench, engine_bench,
                    fig2_yield_cost, fig4_re_integration, fig5_amd,
                    fig6_single_system, fig8_scms, fig9_ocme, fig10_fsmc,
-                   kernels_bench, roofline)
+                   kernels_bench, roofline, service_bench)
 
     benches = [
         ("fig2", fig2_yield_cost), ("fig4", fig4_re_integration),
@@ -24,7 +24,7 @@ def main() -> None:
         ("ablations", ablations),
         ("roofline", roofline), ("codesign", codesign),
         ("kernels", kernels_bench), ("engine", engine_bench),
-        ("dse", dse_bench),
+        ("dse", dse_bench), ("service", service_bench),
     ]
     failures = 0
     for name, mod in benches:

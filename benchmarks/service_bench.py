@@ -1,0 +1,181 @@
+"""Pricing-service throughput benchmark: N concurrent clients with a
+mixed request diet against one continuous-batching PricingService.
+
+  PYTHONPATH=src python -m benchmarks.service_bench [--fast] [--clients N]
+
+Each client interleaves large price sweeps with point queries; dedicated
+clients add Monte-Carlo risk sweeps, ranking, what-if grids and an
+evolutionary search, so every service lane (chunk / mc / gen / raw) sees
+traffic while the scheduler coalesces across clients.
+
+Asserts (acceptance criteria of the service):
+  * ZERO jit recompiles after the warmup tick — every lane the workload
+    touches was compiled at startup or admission, never on the tick loop;
+  * aggregate coalesced throughput >= 0.5x the single-client fused
+    ``ChunkedEvaluator`` rate under >= 8 concurrent clients (the
+    continuous-batching overhead bound; skipped under --fast where the
+    sample is too small to be stable, which instead enforces a loose p95
+    latency ceiling for CI smoke).
+
+Reports aggregate candidates/s, request latency p50/p95/p99, padded-slot
+waste, and cache/recompile counters, and writes BENCH_service.json for
+CI trend tracking (guarded against benchmarks/baselines/ by
+scripts/check_bench_regression.py).
+"""
+import argparse
+import asyncio
+import time
+
+import numpy as np
+
+from repro.dse import ChunkedEvaluator
+from repro.service import (McSpec, MCRiskRequest, PriceRequest,
+                           PriceSystemsRequest, PricingService, RankRequest,
+                           SearchRequest, SearchWarmup, ServiceConfig,
+                           WhatIfRequest)
+
+from .common import emit, write_bench_json
+from .dse_bench import SPACE
+
+
+def _client_requests(i: int, rng: np.random.Generator, size: int,
+                     sweeps: int, sweep_rows: int, fast: bool):
+    """The mixed diet of client ``i`` (deterministic in the seed)."""
+    reqs = []
+    for _ in range(sweeps):
+        reqs.append(PriceRequest(
+            indices=rng.integers(0, size, sweep_rows).tolist()))
+        reqs.append(PriceRequest(indices=rng.integers(0, size, 4).tolist()))
+    if i == 0:
+        reqs.append(SearchRequest(seed=1, population=32,
+                                  generations=3 if fast else 8, elite=8))
+    elif i == 1:
+        reqs.append(MCRiskRequest(
+            indices=rng.integers(0, size, 64).tolist(),
+            mc=McSpec(draws=64, quantiles=(0.5, 0.9), seed=0)))
+    elif i == 2:
+        reqs.append(WhatIfRequest(base=int(rng.integers(0, size))))
+    elif i == 3:
+        reqs.append(RankRequest(indices=rng.integers(0, size, 128).tolist(),
+                                top_k=5))
+    elif i == 4:
+        reqs.append(PriceSystemsRequest(specs=(
+            {"kind": "soc", "name": "soc_a", "area": 250.0,
+             "process": "7nm", "quantity": 1e6},
+            {"kind": "split", "name": "mcm_b", "area": 500.0,
+             "process": "7nm", "n_chiplets": 2, "integration": "MCM",
+             "quantity": 5e5},)))
+    return reqs
+
+
+def run(fast: bool = False, clients: int = 8) -> dict:
+    size = SPACE.size()
+    chunk = 64 if fast else 128
+    sweep_rows = 256 if fast else 2048
+    sweeps = 2 if fast else 4
+    cfg = ServiceConfig(
+        chunk=chunk, split=max(8, chunk // 4),
+        warm_mc=((64, (0.5, 0.9)),),
+        warm_search=(SearchWarmup(population=32, elite=8),),
+        max_pending=10_000_000)
+
+    # -- single-client fused baseline (the 0.5x yardstick) -----------------
+    ev = ChunkedEvaluator(SPACE, candidates_per_chunk=chunk)
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, size, 4 * sweep_rows)
+    ev.evaluate_indices(idx[:chunk])                       # compile
+    t0 = time.perf_counter()
+    ev.evaluate_indices(idx)
+    single = idx.size / (time.perf_counter() - t0)
+
+    # -- the concurrent mixed workload -------------------------------------
+    async def _main():
+        svc = PricingService(SPACE, cfg)
+        await svc.start()                                  # warmup
+
+        async def client(i: int):
+            crng = np.random.default_rng(100 + i)
+            out = []
+            for req in _client_requests(i, crng, size, sweeps, sweep_rows,
+                                        fast):
+                out.append(await svc.submit(req))
+            return out
+
+        t0 = time.perf_counter()
+        per_client = await asyncio.gather(*(client(i)
+                                            for i in range(clients)))
+        wall = time.perf_counter() - t0
+        await svc.stop()
+        return per_client, wall, svc
+
+    per_client, wall, svc = asyncio.run(_main())
+    flat = [r for rs in per_client for r in rs]
+    bad = [r for r in flat if not r.ok]
+    assert not bad, f"{len(bad)} requests failed: {bad[0].error}"
+
+    snap = svc.snapshot()
+    agg = snap["rows_priced"] / wall
+    summary = {
+        "clients": clients,
+        "n_requests": snap["n_ok"],
+        "rows_priced": snap["rows_priced"],
+        "wall_s": wall,
+        "agg_candidates_per_sec": agg,
+        "single_client_candidates_per_sec": single,
+        "vs_single_client": agg / single,
+        "latency_p50_s": snap["latency_s"]["p50"],
+        "latency_p95_s": snap["latency_s"]["p95"],
+        "latency_p99_s": snap["latency_s"]["p99"],
+        "ttfr_p50_s": snap["ttfr_s"]["p50"],
+        "ticks": snap["ticks"],
+        "device_gets": snap["device_gets"],
+        "slot_occupancy": snap["slot_occupancy"],
+        "padded_waste_frac": snap["padded_waste_frac"],
+        "recompiles_after_warmup": snap["recompiles_after_warmup"],
+        "result_cache_hits": snap["result_cache"]["hits"],
+        "fast": fast,
+    }
+    emit("service: mixed workload", [{
+        "clients": clients, "requests": summary["n_requests"],
+        "rows": summary["rows_priced"],
+        "agg_cands_per_sec": agg, "single_client": single,
+        "vs_single": summary["vs_single_client"],
+        "p50_ms": summary["latency_p50_s"] * 1e3,
+        "p95_ms": summary["latency_p95_s"] * 1e3,
+        "p99_ms": summary["latency_p99_s"] * 1e3,
+        "occupancy": summary["slot_occupancy"],
+        "recompiles": summary["recompiles_after_warmup"]}])
+    write_bench_json("service", summary)
+
+    # -- acceptance --------------------------------------------------------
+    assert snap["device_gets"] == snap["ticks"], \
+        "tick loop must sync exactly once per tick"
+    assert summary["recompiles_after_warmup"] == 0, \
+        f"hot path recompiled {summary['recompiles_after_warmup']}x"
+    if fast:
+        # CI smoke: tiny sample, shared boxes — just a sanity ceiling
+        assert summary["latency_p95_s"] < 30.0, \
+            f"p95 {summary['latency_p95_s']:.2f}s absurd for the smoke load"
+    else:
+        assert summary["vs_single_client"] >= 0.5, \
+            (f"coalesced throughput {agg:,.0f} cands/s is "
+             f"{summary['vs_single_client']:.2f}x the single-client rate "
+             f"{single:,.0f} (need >= 0.5x)")
+    print(f"# service: {agg:,.0f} cands/s across {clients} clients "
+          f"({summary['vs_single_client']:.2f}x single-client), "
+          f"p95 {summary['latency_p95_s']*1e3:.1f} ms, "
+          f"0 hot-path recompiles")
+    return summary
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="CI smoke: small sweeps, loose bounds")
+    ap.add_argument("--clients", type=int, default=8)
+    args = ap.parse_args()
+    run(fast=args.fast, clients=args.clients)
+
+
+if __name__ == "__main__":
+    main()

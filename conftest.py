@@ -1,0 +1,9 @@
+"""Root pytest config: put ``src/`` on sys.path so a bare ``pytest`` /
+``python -m pytest`` collects without the manual ``PYTHONPATH=src``
+prefix (the tier-1 invocation keeps working unchanged)."""
+import pathlib
+import sys
+
+_SRC = str(pathlib.Path(__file__).resolve().parent / "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

@@ -1,0 +1,35 @@
+"""repro.service — Actuary-as-a-service.
+
+A continuous-batching cost-query server over the fused ``repro.dse``
+pipeline: concurrent clients submit typed pricing requests, an async
+scheduler coalesces them into constant-shape device ticks, and every
+response is bit-exact against the equivalent direct
+:class:`~repro.dse.evaluate.ChunkedEvaluator` / ``portfolio_search``
+call.  See :mod:`repro.service.server` for the tick loop.
+"""
+from .cache import LaneSignature, ResultCache, TraceCache, \
+    index_digest, space_fingerprint
+from .metrics import RequestRecord, ServiceMetrics
+from .protocol import ErrorInfo, INTERNAL_ERROR, INVALID_REQUEST, \
+    McSpec, MCRiskRequest, PriceRequest, PriceSystemsRequest, QUEUE_FULL, \
+    RankRequest, RankResult, Request, RequestLog, Response, SearchRequest, \
+    SystemsResult, Timing, WhatIfRequest, WhatIfResult, error_response
+from .scheduler import Assignment, GenWork, GroupWork, Lane, Scheduler, \
+    SpanWork, TickPlan
+from .server import PricingService, SearchTask, SearchWarmup, \
+    ServiceConfig, ServiceError, serve
+
+__all__ = [
+    "ErrorInfo", "INTERNAL_ERROR", "INVALID_REQUEST", "QUEUE_FULL",
+    "McSpec", "MCRiskRequest", "PriceRequest", "PriceSystemsRequest",
+    "RankRequest", "RankResult", "Request", "RequestLog", "Response",
+    "SearchRequest", "SystemsResult", "Timing", "WhatIfRequest",
+    "WhatIfResult", "error_response",
+    "Lane", "Scheduler", "SpanWork", "GroupWork", "GenWork", "Assignment",
+    "TickPlan",
+    "LaneSignature", "ResultCache", "TraceCache", "index_digest",
+    "space_fingerprint",
+    "RequestRecord", "ServiceMetrics",
+    "PricingService", "SearchTask", "SearchWarmup", "ServiceConfig",
+    "ServiceError", "serve",
+]

@@ -1,0 +1,153 @@
+"""Service observability: per-request latency, tick occupancy, cache and
+recompile counters — exported as a JSON snapshot for the bench and tests.
+
+Three measurement surfaces:
+
+* **requests** — submit -> first-result -> done latencies per request
+  (the continuous-batching promise: point queries stay fast while sweeps
+  stream), split by request kind.
+* **ticks** — slot occupancy vs padded waste per device tick, plus the
+  one-``device_get``-per-tick invariant counter.
+* **caches/traces** — result-cache hit rates and post-warmup recompile
+  counts (folded in from the cache layer at snapshot time).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    kind: str
+    n_rows: int
+    t_submit: float
+    t_first: float = 0.0
+    t_done: float = 0.0
+    ok: bool = True
+    cached: bool = False
+
+    @property
+    def latency_s(self) -> float:
+        return max(0.0, self.t_done - self.t_submit)
+
+    @property
+    def ttfr_s(self) -> float:
+        return max(0.0, self.t_first - self.t_submit)
+
+
+def _quantiles(xs: List[float]) -> Dict[str, float]:
+    if not xs:
+        return {"p50": 0.0, "p95": 0.0, "p99": 0.0, "mean": 0.0}
+    a = np.asarray(xs, np.float64)
+    return {"p50": float(np.percentile(a, 50)),
+            "p95": float(np.percentile(a, 95)),
+            "p99": float(np.percentile(a, 99)),
+            "mean": float(a.mean())}
+
+
+class ServiceMetrics:
+    """Mutable counters owned by one :class:`PricingService`."""
+
+    def __init__(self):
+        self.reset()
+
+    def reset(self):
+        self.requests: List[RequestRecord] = []
+        self.n_errors = 0
+        self.n_rejected = 0                  # backpressure rejections
+        self.ticks = 0
+        self.device_gets = 0
+        self.slots_used = 0
+        self.slots_total = 0
+        self.gen_ticks = 0
+        self.rows_priced = 0                 # candidate rows through kernels
+        self.busy_s = 0.0                    # wall inside ticks
+        self.per_lane_ticks: Dict[str, int] = {}
+        self.t_start = time.perf_counter()
+
+    # -- request lifecycle ---------------------------------------------------
+    def start_request(self, kind: str, n_rows: int,
+                      t_submit: float) -> RequestRecord:
+        rec = RequestRecord(kind=kind, n_rows=n_rows, t_submit=t_submit)
+        self.requests.append(rec)
+        return rec
+
+    def reject(self):
+        self.n_rejected += 1
+
+    def finish_request(self, rec: RequestRecord, ok: bool,
+                       cached: bool = False):
+        rec.t_done = time.perf_counter()
+        if not rec.t_first:
+            rec.t_first = rec.t_done
+        rec.ok = ok
+        rec.cached = cached
+        if not ok:
+            self.n_errors += 1
+
+    # -- tick accounting -----------------------------------------------------
+    def record_tick(self, lane_kind: str, slots: int, used: int,
+                    rows_priced: int, wall_s: float):
+        self.ticks += 1
+        self.device_gets += 1        # the tick loop does exactly one get
+        self.busy_s += wall_s
+        self.rows_priced += rows_priced
+        self.per_lane_ticks[lane_kind] = \
+            self.per_lane_ticks.get(lane_kind, 0) + 1
+        if lane_kind == "gen":
+            self.gen_ticks += 1
+        else:
+            self.slots_used += used
+            self.slots_total += slots
+
+    # -- snapshot ------------------------------------------------------------
+    def snapshot(self, trace_stats: Optional[Dict] = None,
+                 cache_stats: Optional[Dict] = None) -> Dict:
+        done = [r for r in self.requests if r.t_done]
+        ok = [r for r in done if r.ok]
+        snap = {
+            "n_requests": len(self.requests),
+            "n_done": len(done),
+            "n_ok": len(ok),
+            "n_errors": self.n_errors,
+            "n_rejected": self.n_rejected,
+            "requests_by_kind": {
+                k: sum(1 for r in done if r.kind == k)
+                for k in sorted({r.kind for r in done})},
+            "latency_s": _quantiles([r.latency_s for r in ok]),
+            "ttfr_s": _quantiles([r.ttfr_s for r in ok]),
+            "ticks": self.ticks,
+            "device_gets": self.device_gets,
+            "gen_ticks": self.gen_ticks,
+            "ticks_by_lane": dict(self.per_lane_ticks),
+            "slot_occupancy": (self.slots_used / self.slots_total
+                               if self.slots_total else 0.0),
+            "padded_waste_frac": (1.0 - self.slots_used / self.slots_total
+                                  if self.slots_total else 0.0),
+            "rows_priced": self.rows_priced,
+            "busy_s": self.busy_s,
+            "rows_per_sec_busy": (self.rows_priced / self.busy_s
+                                  if self.busy_s > 0 else 0.0),
+            "wall_s": time.perf_counter() - self.t_start,
+        }
+        if trace_stats is not None:
+            snap["trace"] = dict(trace_stats)
+            snap["recompiles_after_warmup"] = \
+                trace_stats.get("tick_recompiles", 0)
+        if cache_stats is not None:
+            snap["result_cache"] = dict(cache_stats)
+        return snap
+
+    def write_json(self, path, trace_stats=None, cache_stats=None
+                   ) -> pathlib.Path:
+        path = pathlib.Path(path)
+        path.write_text(json.dumps(
+            self.snapshot(trace_stats, cache_stats), indent=2,
+            sort_keys=True, default=float) + "\n")
+        return path

@@ -1,0 +1,260 @@
+"""Typed request/response envelopes for the pricing service.
+
+The wire contract of :class:`~repro.service.server.PricingService`,
+following the shape of vLLM's ``serving_engine.py`` protocol layer: every
+submission is a typed request dataclass; every outcome — including
+failures — comes back as a :class:`Response` envelope carrying the
+request id, timing, and either a result payload or a typed
+:class:`ErrorInfo`.  A request NEVER raises into a sibling: errors are
+enveloped per request and the tick loop keeps serving.
+
+Request types (all priced through the fused ``repro.dse`` kernels and
+therefore bit-exact against direct :class:`ChunkedEvaluator` /
+``portfolio_search`` calls):
+
+* :class:`PriceRequest`    — price a candidate index/object list.
+* :class:`RankRequest`     — price + rank a candidate set (or the whole
+  space), return the top-k with materialized labels.
+* :class:`MCRiskRequest`   — Monte-Carlo risk sweep over candidates.
+* :class:`WhatIfRequest`   — packaging/node deltas around a base
+  candidate (the Tang & Xie-style "what if we used InFO instead of MCM
+  at 5nm?" grid).
+* :class:`SearchRequest`   — evolutionary portfolio search, advanced one
+  jitted generation per tick so long searches interleave with point
+  queries.
+* :class:`PriceSystemsRequest` — price a raw ``spec()`` dict list (no
+  DesignSpace needed), coalesced into a fixed padded engine batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from ..dse.evaluate import CandidateResult, EvalArrays
+from ..dse.search import RiskConfig, SearchResult
+from ..dse.space import Candidate
+from ..dse.uncertainty import Uncertainty
+
+# Typed error codes (the closed set clients may dispatch on).
+QUEUE_FULL = "queue_full"            # backpressure: bounded queue rejected
+INVALID_REQUEST = "invalid_request"  # failed validation at admission
+INTERNAL_ERROR = "internal"          # tick-time failure, isolated per request
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorInfo:
+    """Typed error envelope — returned, never raised across requests."""
+
+    code: str
+    message: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Timing:
+    """Per-request latency surface (seconds, service-relative)."""
+
+    submit_s: float            # absolute submit timestamp (perf_counter)
+    first_result_s: float      # submit -> first coalesced rows on host
+    done_s: float              # submit -> response ready
+
+
+@dataclasses.dataclass(frozen=True)
+class McSpec:
+    """Monte-Carlo configuration of a risk sweep.
+
+    ``(draws, quantiles)`` are static jit signature components — keep
+    them on the service's warmed menu (``ServiceConfig.warm_mc``) so the
+    hot path never recompiles; ``seed``/``sigmas`` are traced arguments
+    and coalesce freely among requests that share them.
+    """
+
+    draws: int = 128
+    quantiles: Tuple[float, ...] = (0.5, 0.9)
+    seed: int = 0
+    sigmas: Uncertainty = dataclasses.field(default_factory=Uncertainty)
+
+
+@dataclasses.dataclass(frozen=True)
+class PriceRequest:
+    """Price a candidate list: indices (fast path) or Candidate objects."""
+
+    indices: Optional[Sequence[int]] = None
+    candidates: Tuple[Candidate, ...] = ()
+    flow: str = "chip-last"
+    mc: Optional[McSpec] = None      # attach risk stats to every row
+
+    kind = "price"
+
+
+@dataclasses.dataclass(frozen=True)
+class RankRequest:
+    """Price + rank a candidate set; ``indices=None`` ranks the whole
+    space.  Ties rank by candidate index (deterministic)."""
+
+    indices: Optional[Sequence[int]] = None
+    top_k: int = 10
+    flow: str = "chip-last"
+    mc: Optional[McSpec] = None      # rank on a risk stat instead of cost
+    objective: str = "cost"          # "cost" or a risk key (e.g. "q90")
+
+    kind = "rank"
+
+
+@dataclasses.dataclass(frozen=True)
+class MCRiskRequest:
+    """Monte-Carlo risk sweep: per-candidate quantiles under common
+    random numbers (same scenarios for every candidate)."""
+
+    indices: Sequence[int] = ()
+    mc: McSpec = dataclasses.field(default_factory=McSpec)
+    flow: str = "chip-last"
+
+    kind = "mc_risk"
+
+
+@dataclasses.dataclass(frozen=True)
+class WhatIfRequest:
+    """Packaging/node what-if grid around ``base``: re-price the same
+    architecture under every (process, integration) combination and
+    report deltas vs the base.  Empty axes default to the space's menus;
+    combinations outside the space are reported in ``skipped``, not
+    errored."""
+
+    base: Union[Candidate, int] = 0
+    processes: Tuple[str, ...] = ()
+    integrations: Tuple[str, ...] = ()
+    flow: str = "chip-last"
+
+    kind = "what_if"
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchRequest:
+    """Evolutionary portfolio search (see ``repro.dse.portfolio_search``
+    — same semantics, same determinism in ``seed``), served one jitted
+    generation step per tick."""
+
+    seed: int = 0
+    population: int = 32
+    generations: int = 12
+    elite: int = 6
+    jump_prob: float = 0.15
+    risk: Optional[RiskConfig] = None
+    flow: str = "chip-last"
+
+    kind = "search"
+
+
+@dataclasses.dataclass(frozen=True)
+class PriceSystemsRequest:
+    """Price a raw system ``spec()`` dict list (one co-produced
+    ``share_nre`` group, like ``SystemBatch.from_specs``); no DesignSpace
+    membership required.  The group is priced in one tick (NRE amortizes
+    across the group), so it must fit the service's raw-lane budget."""
+
+    specs: Tuple[Dict[str, Any], ...] = ()
+    flow: str = "chip-last"
+
+    kind = "price_systems"
+
+
+Request = Union[PriceRequest, RankRequest, MCRiskRequest, WhatIfRequest,
+                SearchRequest, PriceSystemsRequest]
+
+
+# ---------------------------------------------------------------------------
+# Result payloads
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RankResult:
+    """Top-k of a ranked candidate set."""
+
+    objective: str
+    order: np.ndarray                  # (n,) candidate indices, best first
+    values: np.ndarray                 # (n,) objective values, sorted
+    top: List[CandidateResult]         # materialized top-k (labels etc.)
+
+
+@dataclasses.dataclass
+class WhatIfResult:
+    """Per-(process, integration) re-pricing of the base architecture."""
+
+    base_label: str
+    base_cost: float
+    rows: List[Dict]                   # label/process/integration/cost/delta
+    skipped: List[Dict]                # combos outside the space + reason
+
+
+@dataclasses.dataclass
+class SystemsResult:
+    """Per-system engine totals for a raw spec-list group."""
+
+    rows: List[Dict]                   # name / re / nre / total / quantity
+
+
+@dataclasses.dataclass
+class Response:
+    """The one answer envelope: ``ok`` + result, or a typed error."""
+
+    request_id: int
+    kind: str
+    ok: bool
+    result: Optional[Union[EvalArrays, RankResult, WhatIfResult,
+                           SearchResult, SystemsResult]] = None
+    error: Optional[ErrorInfo] = None
+    timing: Optional[Timing] = None
+    cached: bool = False               # served from the result cache
+
+    @property
+    def latency_s(self) -> float:
+        return self.timing.done_s if self.timing else 0.0
+
+
+def error_response(request_id: int, kind: str, code: str, message: str,
+                   t_submit: float = 0.0) -> Response:
+    now = time.perf_counter()
+    dt = max(0.0, now - t_submit) if t_submit else 0.0
+    return Response(request_id=request_id, kind=kind, ok=False,
+                    error=ErrorInfo(code=code, message=message),
+                    timing=Timing(submit_s=t_submit, first_result_s=dt,
+                                  done_s=dt))
+
+
+# ---------------------------------------------------------------------------
+# Request logging (vLLM serving_engine-style)
+# ---------------------------------------------------------------------------
+
+
+class RequestLog:
+    """Structured per-request event log.
+
+    Mirrors vLLM's ``RequestLogger``: every admission/completion/error is
+    one event with the request id and a compact summary — queryable in
+    tests via :meth:`records` and mirrored to the ``repro.service``
+    :mod:`logging` channel (DEBUG) for operators."""
+
+    def __init__(self, keep: int = 1024,
+                 logger: Optional[logging.Logger] = None):
+        self.keep = int(keep)
+        self.logger = logger or logging.getLogger("repro.service")
+        self._records: List[Dict] = []
+
+    def event(self, request_id: int, event: str, **fields):
+        rec = {"t": time.perf_counter(), "request_id": int(request_id),
+               "event": event, **fields}
+        self._records.append(rec)
+        if len(self._records) > self.keep:
+            del self._records[:len(self._records) - self.keep]
+        self.logger.debug("req %d %s %s", request_id, event, fields)
+
+    def records(self, request_id: Optional[int] = None,
+                event: Optional[str] = None) -> List[Dict]:
+        return [r for r in self._records
+                if (request_id is None or r["request_id"] == request_id)
+                and (event is None or r["event"] == event)]

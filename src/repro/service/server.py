@@ -1,0 +1,912 @@
+"""Actuary-as-a-service: the continuous-batching cost-query server.
+
+The same slot/pad idiom as :mod:`repro.serving.engine` (vLLM-style
+continuous batching), but the "decode step" is the fused DSE chunk
+kernel: concurrent clients submit typed pricing requests
+(:mod:`repro.service.protocol`), an async scheduler
+(:mod:`repro.service.scheduler`) coalesces heterogeneous pending work
+into the constant ``chunk_shape`` signatures of
+:class:`~repro.dse.evaluate.ChunkedEvaluator` / ``portfolio_search``,
+dispatches ONE device tick, and streams per-request results back with
+exactly one ``jax.device_get`` per tick.
+
+Because ticks call the very same module-level jits the direct APIs use
+(``_CHUNK_JIT`` / ``_CHUNK_MC_JIT`` / the search generation step), and
+because every per-candidate value in those kernels depends only on its
+own row (padding is cost-neutral by construction), a coalesced response
+is **bit-exact** against the equivalent single-request
+``ChunkedEvaluator.evaluate_indices`` / ``portfolio_search`` call — the
+hard parity oracle ``tests/test_service.py`` pins with 0 relative error.
+
+Lifecycle::
+
+    svc = PricingService(space, ServiceConfig(chunk=128))
+    await svc.start()            # pre-warms every configured jit trace
+    resp = await svc.submit(PriceRequest(indices=[3, 17, 912]))
+    resp.result.portfolio_cost   # EvalArrays, bit-exact vs direct call
+    await svc.stop()
+
+or synchronously: ``responses, svc = serve(space, requests, config)``.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.batch import SystemBatch, pad_batch
+from ..core.engine import _TOTAL_JIT
+from ..core.system import System, spec
+from ..dse.evaluate import _CHUNK_JIT, _CHUNK_MC_JIT, ChunkedEvaluator, \
+    EvalArrays
+from ..dse.search import SearchResult, _default_mc_key, _front, _gen_step, \
+    _rank
+from ..dse.space import ArchChoice, Candidate, DesignSpace
+from .cache import LaneSignature, ResultCache, TraceCache, space_fingerprint
+from .metrics import RequestRecord, ServiceMetrics
+from .protocol import INTERNAL_ERROR, INVALID_REQUEST, QUEUE_FULL, McSpec, \
+    MCRiskRequest, PriceRequest, PriceSystemsRequest, RankRequest, Request, \
+    RequestLog, Response, SearchRequest, SystemsResult, Timing, \
+    WhatIfRequest, WhatIfResult, RankResult, error_response
+from .scheduler import Assignment, GenWork, GroupWork, Lane, Scheduler, \
+    SpanWork, TickPlan
+
+
+class ServiceError(Exception):
+    """Admission-time rejection; becomes a typed error envelope."""
+
+    def __init__(self, code: str, message: str):
+        super().__init__(message)
+        self.code = code
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchWarmup:
+    """One gen-step jit signature to pre-compile at startup."""
+
+    population: int = 32
+    elite: int = 6
+    jump_prob: float = 0.15
+    n_draws: int = 0          # 0 = nominal objective
+    quantile: float = 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Serving shape + warmup menu.  ``chunk`` and the warm lists are jit
+    signature components: requests outside the warmed menu still work,
+    but compile at admission time (never inside a tick)."""
+
+    chunk: int = 64                    # candidate slots per device tick
+    split: Optional[int] = None        # max slots one request takes per pass
+    flows: Tuple[str, ...] = ("chip-last",)
+    max_pending: int = 1_000_000       # queued-row budget (backpressure)
+    raw_slots: int = 16                # system slots of the raw spec lane
+    raw_max_chips: Optional[int] = None
+    result_cache_entries: int = 256
+    result_cache_max_rows: int = 65536
+    warm_mc: Tuple[Tuple[int, Tuple[float, ...]], ...] = ((128, (0.5, 0.9)),)
+    warm_search: Tuple[SearchWarmup, ...] = ()
+    log_keep: int = 1024
+
+
+@dataclasses.dataclass(eq=False)
+class _Active:
+    """Server-side state of one in-flight request."""
+
+    uid: int
+    kind: str
+    request: Request
+    rec: RequestRecord
+    future: asyncio.Future
+    cost: int = 0                      # admitted row budget (released at end)
+    n_rows: int = 0
+    rows_done: int = 0
+    idx: Optional[np.ndarray] = None
+    accum: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    risk_keys: Tuple[str, ...] = ()
+    payload_fn: Optional[Callable] = None    # EvalArrays -> result payload
+    cache_key: Optional[Tuple] = None
+    on_partial: Optional[Callable] = None
+    task: Optional["SearchTask"] = None
+    failed: bool = False
+
+
+def _risk_keys(quantiles: Tuple[float, ...]) -> Tuple[str, ...]:
+    return ("mean", "std") + tuple(f"q{int(round(q * 100))}"
+                                   for q in quantiles)
+
+
+class SearchTask:
+    """Device-side state of one evolutionary search, advanced one jitted
+    generation per tick.  The key schedule, generation step, history and
+    final ranking replicate :func:`repro.dse.search.portfolio_search`
+    exactly, so the served result is identical to the direct call."""
+
+    def __init__(self, svc: "PricingService", active: _Active,
+                 sr: SearchRequest):
+        self.svc = svc
+        self.active = active
+        self.sr = sr
+        key = jax.random.PRNGKey(sr.seed)
+        self.obj = "cost"
+        self.n_draws, self.quantile = 0, 0.5
+        self.mc_key, self.sig = key, jnp.zeros((4,), jnp.float32)
+        if sr.risk is not None:
+            self.obj = sr.risk.objective_key
+            self.mc_key = _default_mc_key(key)
+            self.sig = sr.risk.sigmas.as_array()
+            self.n_draws = int(sr.risk.n_draws)
+            self.quantile = float(sr.risk.quantile)
+        k_init, self.k_loop = jax.random.split(key)
+        self.pop = jax.random.randint(k_init, (sr.population,), 0,
+                                      svc.space.size(), dtype=jnp.int32)
+        self.seen: set = set()
+        self.history: List[Dict] = []
+        self.best_obj, self.best_idx = np.inf, -1
+        self.gen = 0
+
+    def device_call(self):
+        """Dispatch one generation; returns the arrays to fetch (the
+        next population stays on device)."""
+        self.k_loop, k_gen = jax.random.split(self.k_loop)
+        pop_out, pop_next, gen_idx, gen_obj = _gen_step()(
+            self.svc.enc.tables, k_gen, self.pop, self.svc.qty,
+            self.mc_key, self.sig, meta=self.svc.enc.meta,
+            flow=self.sr.flow, population=self.sr.population,
+            elite=self.sr.elite, jump_prob=float(self.sr.jump_prob),
+            n_draws=self.n_draws, quantile=self.quantile)
+        self.pop = pop_next
+        return (pop_out, gen_idx, gen_obj)
+
+    def consume(self, host) -> bool:
+        """Fold one generation's host results in; True when the
+        generation budget is spent (ranking sweep comes next)."""
+        pop_h, gen_idx, gen_obj = host
+        self.seen.update(int(i) for i in pop_h)
+        if float(gen_obj) < self.best_obj:
+            self.best_obj, self.best_idx = float(gen_obj), int(gen_idx)
+        self.history.append({
+            "generation": self.gen,
+            "evaluated": len(self.seen),
+            "best_objective": self.best_obj,
+            "best_label": self.svc.space.candidate_at(
+                self.best_idx).label(),
+            "gen_best": float(gen_obj)})
+        self.gen += 1
+        return self.gen >= self.sr.generations
+
+    def uniq_indices(self) -> np.ndarray:
+        return np.asarray(sorted(self.seen), np.int64)
+
+    def finalize(self, arrays: EvalArrays) -> SearchResult:
+        results = self.svc.ev.results_from_arrays(arrays)
+        ranked = _rank(results, self.obj)
+        return SearchResult(best=ranked[0], ranked=ranked,
+                            pareto=_front(ranked, self.obj),
+                            history=self.history,
+                            n_evaluated=len(results),
+                            objective_key=self.obj)
+
+
+class PricingService:
+    """The continuous-batching pricing server for one
+    :class:`~repro.dse.space.DesignSpace`."""
+
+    def __init__(self, space: DesignSpace,
+                 config: Optional[ServiceConfig] = None,
+                 log: Optional[RequestLog] = None):
+        self.space = space
+        self.cfg = config or ServiceConfig()
+        if not self.cfg.flows:
+            raise ValueError("service needs at least one flow")
+        self.enc = space.encoder()
+        self.qty = jnp.asarray([sk.quantity for sk in space.skus],
+                               jnp.float32)
+        self.n_skus = len(space.skus)
+        # direct-API twin: shares the module-level jits (and therefore the
+        # compiled traces) with every tick; also the host-side
+        # results_from_arrays helper.
+        self.ev = ChunkedEvaluator(space, candidates_per_chunk=self.cfg.chunk,
+                                   flow=self.cfg.flows[0])
+        self.fingerprint = space_fingerprint(space)
+        self.sched = Scheduler(slots=self.cfg.chunk, split=self.cfg.split,
+                               raw_slots=self.cfg.raw_slots,
+                               max_pending=self.cfg.max_pending)
+        self.metrics = ServiceMetrics()
+        self.log = log or RequestLog(keep=self.cfg.log_keep)
+        self.traces = TraceCache()
+        self.results = ResultCache(self.cfg.result_cache_entries,
+                                   self.cfg.result_cache_max_rows)
+        self.raw_max_chips = (self.cfg.raw_max_chips
+                              or max(space.max_chips(), 4))
+        r, c = self.cfg.raw_slots, self.raw_max_chips
+        self.raw_pad = dict(n_systems=r, max_chips=c,
+                            chip_entities=r * c + 1, pkg_entities=r + 1,
+                            mod_entities=2 * r * c + 1,
+                            mod_instances=2 * r * c,
+                            d2d_entities=r * c + 1, d2d_instances=r * c)
+        self._lane_args: Dict[Lane, Tuple] = {}
+        self._active: Dict[int, _Active] = {}
+        self._uid = 0
+        self._task: Optional[asyncio.Task] = None
+        self._wake: Optional[asyncio.Event] = None
+        self._running = False
+        self.warmed = False
+
+    # ------------------------------------------------------------------
+    # Warmup: compile every configured lane signature before serving
+    # ------------------------------------------------------------------
+
+    def warmup(self):
+        """Pre-compile the trace cache so no cold request ever recompiles
+        on the hot path.  Idempotent; called by :meth:`start`."""
+        for flow in self.cfg.flows:
+            self._ensure_chunk(flow)
+            for draws, quantiles in self.cfg.warm_mc:
+                self._ensure_mc(flow, int(draws), tuple(quantiles))
+            if self.cfg.raw_slots > 0:
+                self._ensure_raw(flow)
+            for w in self.cfg.warm_search:
+                self._ensure_gen(flow, w)
+        self.warmed = True
+
+    def _ensure_chunk(self, flow: str):
+        sig = LaneSignature("chunk", flow)
+        dev0 = jnp.zeros((self.cfg.chunk,), jnp.int32)
+        self.traces.ensure(sig, lambda: jax.device_get(_CHUNK_JIT(
+            self.enc.tables, dev0, self.qty, meta=self.enc.meta, flow=flow)))
+
+    def _ensure_mc(self, flow: str, draws: int, quantiles: Tuple[float, ...]):
+        sig = LaneSignature("mc", flow, (draws, quantiles))
+        dev0 = jnp.zeros((self.cfg.chunk,), jnp.int32)
+        key0 = jax.random.PRNGKey(0)
+        sig0 = jnp.zeros((4,), jnp.float32)
+        self.traces.ensure(sig, lambda: jax.device_get(_CHUNK_MC_JIT(
+            self.enc.tables, dev0, self.qty, key0, sig0, meta=self.enc.meta,
+            flow=flow, n_draws=draws, quantiles=quantiles)))
+
+    def _ensure_gen(self, flow: str, w: SearchWarmup):
+        sig = LaneSignature("gen", flow, (w.population, w.elite,
+                                          float(w.jump_prob), w.n_draws,
+                                          float(w.quantile)))
+        key0 = jax.random.PRNGKey(0)
+        # the task's own key schedule also jits (randint/split/fold_in) —
+        # run it once here so admission stays compile-free too
+        k_init, _ = jax.random.split(key0)
+        _default_mc_key(key0)
+        pop0 = jax.random.randint(k_init, (w.population,), 0,
+                                  self.space.size(), dtype=jnp.int32)
+        self.traces.ensure(sig, lambda: jax.device_get(_gen_step()(
+            self.enc.tables, key0, pop0, self.qty, key0,
+            jnp.zeros((4,), jnp.float32), meta=self.enc.meta, flow=flow,
+            population=w.population, elite=w.elite,
+            jump_prob=float(w.jump_prob), n_draws=w.n_draws,
+            quantile=float(w.quantile))[2:]))
+
+    def _ensure_raw(self, flow: str):
+        sig = LaneSignature("raw", flow)
+
+        def compile_raw():
+            s = spec({"kind": "soc", "name": "__warm", "area": 100.0,
+                      "process": self.space.processes[0], "quantity": 1.0})
+            b = SystemBatch.from_systems([s], share_nre=[0],
+                                         max_chips=self.raw_max_chips)
+            jax.device_get(_TOTAL_JIT(pad_batch(b, **self.raw_pad), flow))
+
+        self.traces.ensure(sig, compile_raw)
+
+    # ------------------------------------------------------------------
+    # Lifecycle
+    # ------------------------------------------------------------------
+
+    async def start(self):
+        if self._task is not None:
+            return
+        if not self.warmed:
+            self.warmup()
+        self._wake = asyncio.Event()
+        self._running = True
+        self._task = asyncio.get_running_loop().create_task(self._run())
+
+    async def stop(self):
+        """Drain remaining work, then stop the tick loop."""
+        self._running = False
+        if self._wake is not None:
+            self._wake.set()
+        if self._task is not None:
+            await self._task
+            self._task = None
+
+    async def _run(self):
+        while True:
+            if not self.sched.has_work():
+                if not self._running:
+                    break
+                self._wake.clear()
+                if not self.sched.has_work():        # re-check after clear
+                    await self._wake.wait()
+                continue
+            self._tick()
+            await asyncio.sleep(0)   # let clients submit between ticks
+
+    # ------------------------------------------------------------------
+    # Submission
+    # ------------------------------------------------------------------
+
+    async def submit(self, request: Request,
+                     on_partial: Optional[Callable] = None) -> Response:
+        """Submit one typed request; always returns a Response envelope
+        (typed error inside on rejection — never an exception).
+
+        ``on_partial(rows_done, n_rows)`` streams coalesced progress as
+        the scheduler ticks through the request."""
+        self._uid += 1
+        uid = self._uid
+        t_submit = time.perf_counter()
+        self.log.event(uid, "submit", kind=request.kind)
+        try:
+            active, items, cached = self._lower(uid, request, t_submit,
+                                                on_partial)
+        except ServiceError as e:
+            rec = self.metrics.start_request(request.kind, 0, t_submit)
+            self.metrics.finish_request(rec, ok=False)
+            self.log.event(uid, "rejected", code=e.code, message=str(e))
+            return error_response(uid, request.kind, e.code, str(e),
+                                  t_submit)
+        if cached is not None:
+            self.metrics.finish_request(active.rec, ok=True, cached=True)
+            self.log.event(uid, "cache_hit")
+            now = time.perf_counter()
+            return Response(request_id=uid, kind=request.kind, ok=True,
+                            result=cached, cached=True,
+                            timing=Timing(t_submit, now - t_submit,
+                                          now - t_submit))
+        if not self.sched.admit(items, active.cost):
+            self.metrics.reject()
+            self.metrics.finish_request(active.rec, ok=False)
+            self.log.event(uid, "rejected", code=QUEUE_FULL)
+            return error_response(
+                uid, request.kind, QUEUE_FULL,
+                f"pending row budget exhausted "
+                f"({self.sched.pending_rows}/{self.sched.max_pending} used, "
+                f"request needs {active.cost})", t_submit)
+        self._active[uid] = active
+        self.log.event(uid, "admitted", rows=active.n_rows)
+        if self._wake is not None:
+            self._wake.set()
+        return await active.future
+
+    # ------------------------------------------------------------------
+    # Lowering: request -> lane + work items + finalizers
+    # ------------------------------------------------------------------
+
+    def _mc_lane(self, flow: str, mc: McSpec, key) -> Lane:
+        quantiles = tuple(float(q) for q in mc.quantiles)
+        draws = int(mc.draws)
+        self._ensure_mc(flow, draws, quantiles)    # admission-time compile
+        key_t = tuple(int(x) for x in np.asarray(key).ravel())
+        sig_t = (mc.sigmas.defect_sigma, mc.sigmas.wafer_cost_sigma,
+                 mc.sigmas.bond_sigma, mc.sigmas.interposer_sigma)
+        lane = Lane(kind="mc", flow=flow, mc=(draws, quantiles, key_t, sig_t))
+        self._lane_args.setdefault(
+            lane, (key, mc.sigmas.as_array(), draws, quantiles))
+        return lane
+
+    def _check_flow(self, flow: str):
+        if flow not in self.cfg.flows:
+            raise ServiceError(
+                INVALID_REQUEST,
+                f"flow {flow!r} is not served (configured: {self.cfg.flows})")
+
+    def _check_indices(self, indices, candidates=()) -> np.ndarray:
+        if indices is None and candidates:
+            try:
+                indices = [self.space.index_of(c) for c in candidates]
+            except ValueError as e:
+                raise ServiceError(INVALID_REQUEST, str(e)) from None
+        if indices is None:
+            raise ServiceError(INVALID_REQUEST,
+                               "request needs indices or candidates")
+        idx = np.asarray(indices, np.int64)
+        if idx.ndim != 1 or idx.size == 0:
+            raise ServiceError(INVALID_REQUEST,
+                               "need a 1-D, non-empty index vector")
+        if idx.min() < 0 or idx.max() >= self.space.size():
+            raise ServiceError(
+                INVALID_REQUEST,
+                f"candidate index out of range [0, {self.space.size()})")
+        return idx
+
+    def _alloc_sweep(self, active: _Active, idx: np.ndarray,
+                     quantiles: Optional[Tuple[float, ...]]):
+        n = int(idx.size)
+        s = self.n_skus
+        active.idx = idx
+        active.n_rows = n
+        active.cost = n
+        active.accum = {"unit": np.empty((n, s), np.float32),
+                        "re": np.empty((n, s), np.float32),
+                        "nre": np.empty((n, s), np.float32),
+                        "pf": np.empty((n,), np.float32)}
+        if quantiles is not None:
+            active.risk_keys = _risk_keys(quantiles)
+            for k in active.risk_keys:
+                active.accum["risk:" + k] = np.empty((n,), np.float32)
+
+    def _sweep_arrays(self, active: _Active) -> EvalArrays:
+        risk = None
+        if active.risk_keys:
+            risk = {k: active.accum["risk:" + k] for k in active.risk_keys}
+        return EvalArrays(idx=active.idx,
+                          sku_unit_total=active.accum["unit"],
+                          sku_unit_re=active.accum["re"],
+                          sku_unit_nre=active.accum["nre"],
+                          portfolio_cost=active.accum["pf"], risk=risk)
+
+    def _lower(self, uid: int, request: Request, t_submit: float,
+               on_partial) -> Tuple[_Active, List, Optional[object]]:
+        kind = getattr(request, "kind", None)
+        if kind is None:
+            raise ServiceError(INVALID_REQUEST,
+                               f"unknown request type {type(request)!r}")
+        self._check_flow(request.flow)
+        fut = asyncio.get_running_loop().create_future()
+        active = _Active(uid=uid, kind=kind, request=request,
+                         rec=self.metrics.start_request(kind, 0, t_submit),
+                         future=fut, on_partial=on_partial)
+
+        if kind == "search":
+            return self._lower_search(active, request)
+        if kind == "price_systems":
+            return self._lower_systems(active, request)
+
+        # -- index-sweep family: price / rank / mc_risk / what_if ----------
+        mc: Optional[McSpec] = getattr(request, "mc", None)
+        if kind == "mc_risk":
+            mc = request.mc
+        grid_meta = None
+        if kind == "what_if":
+            idx, grid_meta, skipped = self._what_if_grid(request)
+        elif kind == "rank" and request.indices is None:
+            idx = np.arange(self.space.size(), dtype=np.int64)
+        else:
+            idx = self._check_indices(request.indices,
+                                      getattr(request, "candidates", ()))
+        quantiles = None
+        if mc is not None:
+            lane = self._mc_lane(request.flow,  mc,
+                                 jax.random.PRNGKey(mc.seed))
+            quantiles = tuple(float(q) for q in mc.quantiles)
+        else:
+            self._ensure_chunk(request.flow)
+            lane = Lane(kind="chunk", flow=request.flow)
+
+        objective = "cost"
+        if kind == "rank":
+            objective = request.objective
+            if objective != "cost":
+                if quantiles is None:
+                    raise ServiceError(
+                        INVALID_REQUEST,
+                        f"objective {objective!r} needs an McSpec")
+                if objective not in _risk_keys(quantiles):
+                    raise ServiceError(
+                        INVALID_REQUEST,
+                        f"objective {objective!r} not among "
+                        f"{_risk_keys(quantiles)}")
+
+        self._alloc_sweep(active, idx, quantiles)
+        active.rec.n_rows = active.n_rows
+
+        if kind in ("price", "mc_risk"):
+            active.payload_fn = lambda arrays: arrays
+            active.cache_key = ResultCache.key(self.fingerprint,
+                                               request.flow, lane.mc, idx)
+        elif kind == "rank":
+            top_k = int(request.top_k)
+            active.payload_fn = \
+                lambda arrays: self._rank_payload(arrays, objective, top_k)
+            active.cache_key = ResultCache.key(self.fingerprint,
+                                               request.flow, lane.mc, idx)
+        else:  # what_if
+            active.payload_fn = \
+                lambda arrays, g=grid_meta, sk=skipped: \
+                self._what_if_payload(arrays, g, sk)
+
+        if active.cache_key is not None:
+            hit = self.results.get(active.cache_key)
+            if hit is not None:
+                return active, [], active.payload_fn(hit)
+        return active, [SpanWork(owner=active, lane=lane, idx=idx)], None
+
+    def _rank_payload(self, arrays: EvalArrays, objective: str,
+                      top_k: int) -> RankResult:
+        obj = arrays.objective(objective)
+        order = np.lexsort((arrays.idx, obj))   # index breaks exact ties
+        top = order[:max(0, top_k)]
+        risk = None
+        if arrays.risk is not None:
+            risk = {k: v[top] for k, v in arrays.risk.items()}
+        top_arrays = EvalArrays(
+            idx=arrays.idx[top], sku_unit_total=arrays.sku_unit_total[top],
+            sku_unit_re=arrays.sku_unit_re[top],
+            sku_unit_nre=arrays.sku_unit_nre[top],
+            portfolio_cost=arrays.portfolio_cost[top], risk=risk)
+        return RankResult(objective=objective,
+                          order=arrays.idx[order], values=obj[order],
+                          top=self.ev.results_from_arrays(top_arrays))
+
+    # -- what-if -----------------------------------------------------------
+    def _what_if_grid(self, request: WhatIfRequest):
+        base = request.base
+        if isinstance(base, (int, np.integer)):
+            try:
+                base = self.space.candidate_at(int(base))
+            except IndexError as e:
+                raise ServiceError(INVALID_REQUEST, str(e)) from None
+        try:
+            base_idx = self.space.index_of(base)
+        except ValueError as e:
+            raise ServiceError(INVALID_REQUEST, str(e)) from None
+        procs = tuple(request.processes) or self.space.processes
+        ints = tuple(request.integrations) or self.space.integrations
+        grid, skipped = [], []
+        for p in procs:
+            for t in ints:
+                try:
+                    cand = self._swap_tech(base, p, t)
+                    gi = self.space.index_of(cand)
+                    grid.append((p, t, gi, cand.label()))
+                except (ValueError, KeyError) as e:
+                    skipped.append({"process": p, "integration": t,
+                                    "reason": str(e)})
+        if not grid:
+            raise ServiceError(
+                INVALID_REQUEST,
+                f"no valid what-if combination (skipped {len(skipped)})")
+        idx = np.asarray([base_idx] + [g[2] for g in grid], np.int64)
+        return idx, (base.label(), grid), skipped
+
+    @staticmethod
+    def _swap_tech(cand: Candidate, process: str,
+                   integration: str) -> Candidate:
+        if cand.is_reuse:
+            return Candidate(reuse=dataclasses.replace(
+                cand.reuse, process=process, integration=integration))
+        return Candidate(choices=tuple(
+            ArchChoice(c.n_chiplets, process,
+                       "SoC" if c.n_chiplets == 1 else integration)
+            for c in cand.choices))
+
+    def _what_if_payload(self, arrays: EvalArrays, grid_meta,
+                         skipped) -> WhatIfResult:
+        base_label, grid = grid_meta
+        base_cost = float(arrays.portfolio_cost[0])
+        rows = []
+        for j, (p, t, gi, label) in enumerate(grid, start=1):
+            cost = float(arrays.portfolio_cost[j])
+            rows.append({"process": p, "integration": t, "candidate": label,
+                         "portfolio_cost": cost,
+                         "delta_vs_base": cost - base_cost,
+                         "rel_delta": (cost - base_cost) / base_cost})
+        return WhatIfResult(base_label=base_label, base_cost=base_cost,
+                            rows=rows, skipped=list(skipped))
+
+    # -- search ------------------------------------------------------------
+    def _lower_search(self, active: _Active, sr: SearchRequest):
+        if sr.population < 1 or not (1 <= sr.elite <= sr.population):
+            raise ServiceError(INVALID_REQUEST,
+                               "need 1 <= elite <= population")
+        if sr.generations < 1:
+            raise ServiceError(INVALID_REQUEST, "need generations >= 1")
+        n_draws, quantile = 0, 0.5
+        if sr.risk is not None:
+            n_draws, quantile = int(sr.risk.n_draws), float(sr.risk.quantile)
+        self._ensure_gen(sr.flow, SearchWarmup(
+            population=sr.population, elite=sr.elite,
+            jump_prob=float(sr.jump_prob), n_draws=n_draws,
+            quantile=quantile))
+        # the ranking sweep reuses the chunk/mc lane — make sure it's warm
+        if sr.risk is not None:
+            self._ensure_mc(sr.flow, n_draws, (0.5, quantile))
+        else:
+            self._ensure_chunk(sr.flow)
+        active.task = SearchTask(self, active, sr)
+        # budget: every generation prices `population` rows, and the final
+        # ranking sweep at most everything the generations saw.
+        active.cost = sr.population * (sr.generations + 1)
+        active.n_rows = 0             # set when the ranking sweep enqueues
+        active.rec.n_rows = sr.population * sr.generations
+        lane = Lane(kind="gen", flow=sr.flow)
+        return active, [GenWork(owner=active, lane=lane,
+                                task=active.task)], None
+
+    def _enqueue_search_rank(self, active: _Active):
+        """Generations done: stream the distinct priced candidates through
+        the coalescing chunk/mc lane, exactly like portfolio_search's
+        final ``evaluate_indices(uniq)`` sweep."""
+        task, sr = active.task, active.task.sr
+        uniq = task.uniq_indices()
+        if sr.risk is not None:
+            quantiles = (0.5, float(sr.risk.quantile))
+            mc = McSpec(draws=int(sr.risk.n_draws), quantiles=quantiles,
+                        seed=0, sigmas=sr.risk.sigmas)
+            lane = self._mc_lane(sr.flow, mc, task.mc_key)
+        else:
+            quantiles = None
+            lane = Lane(kind="chunk", flow=sr.flow)
+        self._alloc_sweep(active, uniq, quantiles)
+        active.cost = sr.population * (sr.generations + 1)  # unchanged
+        active.payload_fn = task.finalize
+        self.sched.push(SpanWork(owner=active, lane=lane, idx=uniq))
+
+    # -- raw spec lane ------------------------------------------------------
+    def _lower_systems(self, active: _Active, req: PriceSystemsRequest):
+        if self.cfg.raw_slots < 1:
+            raise ServiceError(INVALID_REQUEST,
+                               "raw system lane is disabled (raw_slots=0)")
+        if not req.specs:
+            raise ServiceError(INVALID_REQUEST, "empty spec list")
+        if len(req.specs) > self.cfg.raw_slots:
+            raise ServiceError(
+                INVALID_REQUEST,
+                f"group of {len(req.specs)} systems exceeds the raw lane "
+                f"budget of {self.cfg.raw_slots}")
+        try:
+            systems = [spec(dict(d)) for d in req.specs]
+            for s in systems:
+                if s.n_chips > self.raw_max_chips:
+                    raise ValueError(
+                        f"system {s.name!r} has {s.n_chips} chips "
+                        f"(raw lane limit {self.raw_max_chips})")
+            # dry-run the solo pack: catches duplicate names, bad specs
+            solo = SystemBatch.from_systems(
+                systems, share_nre=[0] * len(systems),
+                max_chips=self.raw_max_chips)
+            if not self._raw_fits(solo):
+                raise ValueError("group exceeds the raw lane entity budget")
+        except (ValueError, KeyError, TypeError) as e:
+            raise ServiceError(INVALID_REQUEST, str(e)) from None
+        self._ensure_raw(req.flow)
+        active.n_rows = len(systems)
+        active.cost = len(systems)
+        active.rec.n_rows = len(systems)
+        lane = Lane(kind="raw", flow=req.flow)
+        return active, [GroupWork(owner=active, lane=lane,
+                                  systems=systems)], None
+
+    def _raw_fits(self, batch: SystemBatch) -> bool:
+        p = self.raw_pad
+        return (len(batch) <= p["n_systems"]
+                and batch.chip_area.shape[1] <= p["max_chips"]
+                and batch.chip_entity_area.shape[0] <= p["chip_entities"]
+                and batch.pkg_entity_area.shape[0] <= p["pkg_entities"]
+                and batch.mod_entity_area.shape[0] <= p["mod_entities"]
+                and batch.mod_sys.shape[0] <= p["mod_instances"]
+                and batch.d2d_entity_nre.shape[0] <= p["d2d_entities"]
+                and batch.d2d_sys.shape[0] <= p["d2d_instances"])
+
+    # ------------------------------------------------------------------
+    # The tick: one lane, one dispatch, ONE jax.device_get
+    # ------------------------------------------------------------------
+
+    def _tick(self) -> bool:
+        plan = self.sched.plan()
+        if plan is None:
+            return False
+        t0 = time.perf_counter()
+        before = self.traces.counts()
+        try:
+            if plan.gen is not None:
+                rows = self._tick_gen(plan)
+            elif plan.lane.kind == "raw":
+                rows = self._tick_raw(plan)
+            else:
+                rows = self._tick_chunk(plan)
+        except Exception as e:  # fail the tick's owners, keep serving
+            self._fail_tick(plan, e)
+            rows = 0
+        recompiled = self.traces.meter_tick(before)
+        wall = time.perf_counter() - t0
+        self.metrics.record_tick(plan.lane.kind, plan.slots, plan.used,
+                                 rows, wall)
+        if recompiled:
+            self.log.event(-1, "tick_recompile", lane=plan.lane.kind,
+                           traces=recompiled)
+        return True
+
+    def _owners(self, plan: TickPlan) -> List[_Active]:
+        owners = []
+        if plan.gen is not None:
+            owners.append(plan.gen.owner)
+        owners += [a.item.owner for a in plan.assignments]
+        owners += [g.owner for g in plan.groups]
+        return owners
+
+    def _fail_tick(self, plan: TickPlan, err: Exception):
+        seen = set()
+        for owner in self._owners(plan):
+            if id(owner) in seen:
+                continue
+            seen.add(id(owner))
+            self._fail(owner, INTERNAL_ERROR,
+                       f"{type(err).__name__}: {err}")
+
+    def _tick_chunk(self, plan: TickPlan) -> int:
+        k = self.cfg.chunk
+        chunk_idx = np.zeros((k,), np.int64)
+        for a in plan.assignments:
+            chunk_idx[a.slot:a.slot + a.n] = \
+                a.item.idx[a.start:a.start + a.n]
+        if plan.used < k and plan.assignments:
+            chunk_idx[plan.used:] = chunk_idx[0]   # cost-neutral padding
+        dev = jnp.asarray(chunk_idx, jnp.int32)
+        if plan.lane.kind == "mc":
+            key, sig, draws, quantiles = self._lane_args[plan.lane]
+            out = _CHUNK_MC_JIT(self.enc.tables, dev, self.qty, key, sig,
+                                meta=self.enc.meta, flow=plan.lane.flow,
+                                n_draws=draws, quantiles=quantiles)
+        else:
+            out = _CHUNK_JIT(self.enc.tables, dev, self.qty,
+                             meta=self.enc.meta, flow=plan.lane.flow)
+        host = jax.device_get(out)                 # THE tick sync
+        now = time.perf_counter()
+        unit, re_t, nre_t, pf = host[0], host[1], host[2], host[3]
+        risk = host[4] if plan.lane.kind == "mc" else None
+        for a in plan.assignments:
+            req: _Active = a.item.owner
+            if req.failed:
+                continue
+            sl = slice(a.slot, a.slot + a.n)
+            dst = slice(a.start, a.start + a.n)
+            req.accum["unit"][dst] = unit[sl]
+            req.accum["re"][dst] = re_t[sl]
+            req.accum["nre"][dst] = nre_t[sl]
+            req.accum["pf"][dst] = pf[sl]
+            if risk is not None:
+                for kk in req.risk_keys:
+                    req.accum["risk:" + kk][dst] = risk[kk][sl]
+            if not req.rec.t_first:
+                req.rec.t_first = now
+            req.rows_done += a.n
+            if req.on_partial is not None:
+                req.on_partial(req.rows_done, req.n_rows)
+            if req.rows_done >= req.n_rows:
+                self._finish_sweep(req)
+        return plan.used
+
+    def _tick_gen(self, plan: TickPlan) -> int:
+        work: GenWork = plan.gen
+        req: _Active = work.owner
+        if req.failed:
+            return 0
+        task = work.task
+        try:
+            out = task.device_call()
+            host = jax.device_get(out)             # THE tick sync
+        except Exception as e:
+            self._fail(req, INTERNAL_ERROR, f"{type(e).__name__}: {e}")
+            return 0
+        if not req.rec.t_first:
+            req.rec.t_first = time.perf_counter()
+        done = task.consume(host)
+        if req.on_partial is not None:
+            req.on_partial(task.gen, task.sr.generations)
+        if done:
+            self._enqueue_search_rank(req)
+        else:
+            self.sched.push(work)
+        return task.sr.population
+
+    def _tick_raw(self, plan: TickPlan) -> int:
+        groups = list(plan.groups)
+        # combined entity tables must fit the padded signature; shed the
+        # newest groups back to the queue head until they do.
+        while groups:
+            systems, gids = [], []
+            for gi, g in enumerate(groups):
+                systems += g.systems
+                gids += [gi] * g.n_systems
+            batch = SystemBatch.from_systems(systems, share_nre=gids,
+                                             max_chips=self.raw_max_chips)
+            if self._raw_fits(batch):
+                break
+            self.sched.queue.appendleft(groups.pop())
+        if not groups:
+            return 0
+        padded = pad_batch(batch, **self.raw_pad)
+        host = jax.device_get(_TOTAL_JIT(padded, plan.lane.flow))  # THE sync
+        now = time.perf_counter()
+        total = np.asarray(host.total, np.float64)
+        re_tot = np.asarray(host.re.total, np.float64)
+        nre_tot = np.asarray(host.nre.total, np.float64)
+        off = 0
+        for g in groups:
+            req: _Active = g.owner
+            rows = []
+            for i, s in enumerate(g.systems):
+                j = off + i
+                rows.append({"system": s.name, "quantity": s.quantity,
+                             "re_total": float(re_tot[j]),
+                             "nre_total": float(nre_tot[j]),
+                             "total": float(total[j])})
+            off += g.n_systems
+            if req.failed:
+                continue
+            req.rec.t_first = req.rec.t_first or now
+            req.rows_done = req.n_rows
+            self._finish(req, SystemsResult(rows=rows))
+        return off
+
+    # ------------------------------------------------------------------
+    # Completion / failure
+    # ------------------------------------------------------------------
+
+    def _finish_sweep(self, req: _Active):
+        try:
+            arrays = self._sweep_arrays(req)
+            if req.cache_key is not None:
+                self.results.put(req.cache_key, arrays)
+            payload = req.payload_fn(arrays)
+        except Exception as e:
+            self._fail(req, INTERNAL_ERROR, f"{type(e).__name__}: {e}")
+            return
+        self._finish(req, payload)
+
+    def _finish(self, req: _Active, payload):
+        self.metrics.finish_request(req.rec, ok=True)
+        self.sched.release(req.cost)
+        self._active.pop(req.uid, None)
+        self.log.event(req.uid, "done", rows=req.n_rows)
+        if not req.future.done():
+            req.future.set_result(Response(
+                request_id=req.uid, kind=req.kind, ok=True, result=payload,
+                timing=Timing(req.rec.t_submit, req.rec.ttfr_s,
+                              req.rec.latency_s)))
+
+    def _fail(self, req: _Active, code: str, message: str):
+        if req.failed:
+            return
+        req.failed = True
+        self.sched.drop_owned_by(req)
+        self.sched.release(req.cost)
+        self.metrics.finish_request(req.rec, ok=False)
+        self._active.pop(req.uid, None)
+        self.log.event(req.uid, "error", code=code, message=message)
+        if not req.future.done():
+            req.future.set_result(error_response(
+                req.uid, req.kind, code, message, req.rec.t_submit))
+
+    # ------------------------------------------------------------------
+    # Observability
+    # ------------------------------------------------------------------
+
+    def snapshot(self) -> Dict:
+        """JSON-ready metrics snapshot (latency, occupancy, caches,
+        recompiles) — the surface the bench and CI assert on."""
+        return self.metrics.snapshot(trace_stats=self.traces.stats(),
+                                     cache_stats=self.results.stats())
+
+
+def serve(space: DesignSpace, requests: Sequence[Request],
+          config: Optional[ServiceConfig] = None,
+          ) -> Tuple[List[Response], PricingService]:
+    """One-shot convenience: start a service, submit ``requests``
+    concurrently, drain, stop.  Returns (responses in request order,
+    the stopped service for metrics inspection)."""
+    svc = PricingService(space, config)
+
+    async def _main():
+        await svc.start()
+        try:
+            return await asyncio.gather(*(svc.submit(r) for r in requests))
+        finally:
+            await svc.stop()
+
+    return asyncio.run(_main()), svc
