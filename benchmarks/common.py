@@ -3,23 +3,73 @@ BENCH_*.json perf-trajectory files CI tracks)."""
 from __future__ import annotations
 
 import json
+import os
 import pathlib
+import platform
 import time
 from typing import Callable, Iterable
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 
+def env_metadata() -> dict:
+    """Environment stamp for BENCH_*.json: the facts needed to judge
+    whether two runs of the perf trajectory are comparable (JAX version
+    and backend, device kind, host CPU budget, and whether the run was
+    traced — tracing is designed to be near-free but a stamped run never
+    has to argue about it)."""
+    meta = {
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "cpu_count": os.cpu_count(),
+        "repro_trace": os.environ.get("REPRO_TRACE", ""),
+    }
+    try:
+        import jax
+        meta["jax_version"] = jax.__version__
+        meta["backend"] = jax.default_backend()
+        devs = jax.devices()
+        meta["n_devices"] = len(devs)
+        meta["device_kind"] = devs[0].device_kind if devs else "none"
+    except Exception as e:            # never fail a bench over a stamp
+        meta["jax_version"] = f"unavailable: {type(e).__name__}"
+    try:
+        from repro import obs
+        meta["trace_enabled"] = bool(obs.enabled())
+    except Exception:
+        meta["trace_enabled"] = None
+    return meta
+
+
 def write_bench_json(name: str, summary: dict) -> pathlib.Path:
     """Persist a benchmark summary as ``BENCH_<name>.json`` at the repo
     root.  CI uploads these as artifacts and
     ``scripts/check_bench_regression.py`` guards them against the
-    committed baselines in ``benchmarks/baselines/``."""
+    committed baselines in ``benchmarks/baselines/``.  Every file is
+    stamped with :func:`env_metadata` under ``"env"`` (existing keys are
+    left untouched; a caller-provided ``env`` wins)."""
+    summary = dict(summary)
+    summary.setdefault("env", env_metadata())
     path = REPO_ROOT / f"BENCH_{name}.json"
     path.write_text(json.dumps(summary, indent=2, sort_keys=True,
                                default=float) + "\n")
     print(f"# wrote {path}")
     return path
+
+
+def obs_summary() -> dict:
+    """Per-phase observability breakdown for a bench summary, or ``{}``
+    when tracing is off (so existing BENCH_*.json keys never change on
+    an untraced run): the tracer's per-phase wall table, per-jit
+    compile/dispatch attribution, and ``device_get`` totals."""
+    from repro import obs
+    if not obs.enabled():
+        return {}
+    from repro.obs import jaxhooks
+    from repro.obs.trace import TRACER
+    return {"phases": TRACER.phase_table(),
+            "jit": jaxhooks.stats(),
+            "device_get": jaxhooks.device_get_stats()}
 
 
 def emit(section: str, rows: Iterable[dict]):

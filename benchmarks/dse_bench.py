@@ -31,7 +31,7 @@ from repro.core.engine import TRACE_COUNTS
 from repro.dse import (ChunkedEvaluator, DesignSpace, SKU, evaluate_direct,
                        portfolio_search)
 
-from .common import write_bench_json
+from .common import obs_summary, write_bench_json
 
 SPACE = DesignSpace(
     skus=(SKU("laptop", 300.0, 2e6), SKU("desktop", 600.0, 1e6),
@@ -161,6 +161,9 @@ def run(n_candidates: int = 10_000, chunk: int = 512, fast: bool = False,
         "search_generations_per_sec": round(gens_per_sec, 2),
         "search_best": sr.best.label,
     }
+    # traced runs (REPRO_TRACE=1) ride per-phase compile/dispatch/
+    # device_get breakdowns along; untraced keys are unchanged.
+    summary.update(obs_summary())
     print(f"candidates           : {n_candidates} "
           f"({summary['n_systems']} systems, chunk={chunk})")
     print(f"fused pipeline       : {wall*1e3:9.1f} ms best-of-{sweeps} "

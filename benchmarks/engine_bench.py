@@ -18,7 +18,7 @@ import jax
 from repro.core import CostEngine, SystemBatch, amortized_costs, re_cost, spec
 from repro.core.engine import TRACE_COUNTS
 
-from .common import write_bench_json
+from .common import obs_summary, write_bench_json
 
 NODES = ("5nm", "7nm", "12nm", "14nm", "28nm")
 INTEGRATIONS = ("SoC", "MCM", "InFO", "2.5D")
@@ -96,6 +96,9 @@ def run(n_systems: int = 10_000):
                "t_engine_s": t_engine, "t_loop_s": t_loop,
                "systems_per_sec": n_systems / t_engine,
                "speedup": t_loop / t_engine, "worst_rel": worst}
+    # traced runs (REPRO_TRACE=1) ride per-phase compile/dispatch/
+    # device_get breakdowns along; untraced keys are unchanged.
+    summary.update(obs_summary())
     write_bench_json("engine", summary)
     return summary
 

@@ -64,22 +64,45 @@ def check(name: str, min_ratio: float) -> bool:
     cur = json.loads(cur_path.read_text())
     base = json.loads(base_path.read_text())
     ok = True
+    failures = []
     for key, kind, bound in RULES[name]:
+        if key not in cur:
+            print(f"[{name}] FAIL {key} MISSING from {cur_path.name} "
+                  f"(rule {kind}) — did the benchmark finish?")
+            failures.append((key, "missing from current run"))
+            ok = False
+            continue
         have = float(cur[key])
         if kind == "ratio":
+            if key not in base:
+                print(f"[{name}] FAIL {key} MISSING from baseline "
+                      f"{base_path.name} — re-commit the baseline")
+                failures.append((key, "missing from baseline"))
+                ok = False
+                continue
             want = min_ratio * float(base[key])
             good = have >= want
             detail = (f">= {want:,.1f} ({min_ratio:g}x baseline "
                       f"{float(base[key]):,.1f})")
+            miss = (f"short by {want - have:,.6g} "
+                    f"({have / want:.2%} of the floor)" if not good else "")
         elif kind == "min":
-            good = have >= bound
-            detail = f">= {bound:g}"
+            want = float(bound)
+            good = have >= want
+            detail = f">= {want:g}"
+            miss = f"short by {want - have:,.6g}" if not good else ""
         else:
-            good = have <= bound
-            detail = f"<= {bound:g}"
+            want = float(bound)
+            good = have <= want
+            detail = f"<= {want:g}"
+            miss = f"over by {have - want:,.6g}" if not good else ""
         print(f"[{name}] {'PASS' if good else 'FAIL'} {key} = {have:,.6g} "
-              f"(need {detail})")
+              f"(need {detail})" + (f" — {miss}" if miss else ""))
+        if not good:
+            failures.append((key, miss))
         ok &= good
+    for key, why in failures:
+        print(f"[{name}] RULE FAILED: {key} — {why}")
     return ok
 
 

@@ -16,13 +16,14 @@ sort/bump costs and the flow formulas.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from ..obs import jaxhooks
+from ..obs.registry import TraceCounts
 from .batch import SystemBatch
 from .re_cost import REBreakdown
 from .yield_model import dies_per_wafer, raw_die_cost, yield_negative_binomial
@@ -30,8 +31,10 @@ from .yield_model import dies_per_wafer, raw_die_cost, yield_negative_binomial
 _EPS = 1e-30
 
 # Python-body execution counter: increments only when jax actually traces,
-# so benchmarks/tests can assert a sweep compiled exactly once.
-TRACE_COUNTS: collections.Counter = collections.Counter()
+# so benchmarks/tests can assert a sweep compiled exactly once.  The
+# TraceCounts shim is a collections.Counter that additionally mirrors
+# every increment into the repro.obs metrics registry (trace_* counters).
+TRACE_COUNTS: TraceCounts = TraceCounts()
 
 
 # ---------------------------------------------------------------------------
@@ -216,10 +219,18 @@ _register(NREBreakdown, ("modules", "chips", "packages", "d2d"))
 _register(TotalCost, ("re", "nre"))
 
 # Module-level jitted entry points so every CostEngine instance shares one
-# compilation cache (same batch shapes => exactly one trace).
-_RE_JIT = jax.jit(_re_impl, static_argnames=("flow",))
-_NRE_JIT = jax.jit(_nre_impl)
-_TOTAL_JIT = jax.jit(_total_impl, static_argnames=("flow",))
+# compilation cache (same batch shapes => exactly one trace).  Each is
+# wrapped in an obs probe that attributes per-signature compile vs
+# dispatch wall when tracing is enabled (a transparent passthrough when
+# it is not — see repro.obs.jaxhooks).
+_RE_JIT = jaxhooks.instrument(
+    jax.jit(_re_impl, static_argnames=("flow",)), "engine.re",
+    trace_key="re", counts=TRACE_COUNTS)
+_NRE_JIT = jaxhooks.instrument(
+    jax.jit(_nre_impl), "engine.nre", trace_key="nre", counts=TRACE_COUNTS)
+_TOTAL_JIT = jaxhooks.instrument(
+    jax.jit(_total_impl, static_argnames=("flow",)), "engine.total",
+    trace_key="total", counts=TRACE_COUNTS)
 
 
 def re_split_relaxed(module_area_mm2, n_chiplets, *, wafer_cost,

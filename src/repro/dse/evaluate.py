@@ -31,6 +31,8 @@ import numpy as np
 from ..core.batch import SystemBatch, pad_batch
 from ..core.engine import (CostEngine, TRACE_COUNTS, _re_impl,
                            portfolio_totals)
+from ..obs import jaxhooks
+from ..obs.trace import TRACER as _TRACER
 from .space import (Candidate, DesignSpace, EncoderMeta, candidate_systems,
                     encode_arrays, encoded_nre)
 from .uncertainty import (Uncertainty, mc_re_totals_impl, mc_totals,
@@ -140,11 +142,16 @@ def _chunk_mc_impl(tables, idx, qty, key, sig, *, meta: EncoderMeta,
 
 
 # Module-level jits with tables passed as (pytree) arguments, so every
-# evaluator over a same-shaped space shares one compiled trace.
-_CHUNK_JIT = jax.jit(_chunk_impl, static_argnames=("meta", "flow"))
-_CHUNK_MC_JIT = jax.jit(_chunk_mc_impl,
-                        static_argnames=("meta", "flow", "n_draws",
-                                         "quantiles"))
+# evaluator over a same-shaped space shares one compiled trace.  The obs
+# probes attribute per-signature compile vs dispatch wall when tracing
+# is enabled and forward transparently when it is not.
+_CHUNK_JIT = jaxhooks.instrument(
+    jax.jit(_chunk_impl, static_argnames=("meta", "flow")),
+    "dse.chunk", trace_key="fused_chunk", counts=TRACE_COUNTS)
+_CHUNK_MC_JIT = jaxhooks.instrument(
+    jax.jit(_chunk_mc_impl,
+            static_argnames=("meta", "flow", "n_draws", "quantiles")),
+    "dse.chunk_mc", trace_key="fused_chunk_mc", counts=TRACE_COUNTS)
 
 
 @dataclasses.dataclass
@@ -273,22 +280,25 @@ class ChunkedEvaluator:
         t0 = time.perf_counter()
         pending, reals = [], []
         for lo in range(0, idx.size, k):
-            chunk = idx[lo:lo + k]
-            n_real = chunk.size
-            if n_real < k:
-                chunk = np.concatenate(
-                    [chunk, np.full(k - n_real, chunk[0], chunk.dtype)])
-            dev = jnp.asarray(chunk, jnp.int32)
-            if mc_key is None:
-                out = _CHUNK_JIT(self.encoder.tables, dev, self._qty32,
-                                 meta=self.encoder.meta, flow=self.flow)
-            else:
-                out = _CHUNK_MC_JIT(self.encoder.tables, dev, self._qty32,
-                                    mc_key, sig, meta=self.encoder.meta,
-                                    flow=self.flow, n_draws=int(mc_draws),
-                                    quantiles=quantiles)
-            pending.append(out)
-            reals.append(n_real)
+            with _TRACER.span("chunk", lo=lo):
+                chunk = idx[lo:lo + k]
+                n_real = chunk.size
+                if n_real < k:
+                    chunk = np.concatenate(
+                        [chunk, np.full(k - n_real, chunk[0], chunk.dtype)])
+                dev = jnp.asarray(chunk, jnp.int32)
+                if mc_key is None:
+                    out = _CHUNK_JIT(self.encoder.tables, dev, self._qty32,
+                                     meta=self.encoder.meta, flow=self.flow)
+                else:
+                    out = _CHUNK_MC_JIT(self.encoder.tables, dev,
+                                        self._qty32, mc_key, sig,
+                                        meta=self.encoder.meta,
+                                        flow=self.flow,
+                                        n_draws=int(mc_draws),
+                                        quantiles=quantiles)
+                pending.append(out)
+                reals.append(n_real)
         host = jax.device_get(pending)          # one sync for the stream
         self.elapsed_s += time.perf_counter() - t0
         outs = [jax.tree_util.tree_map(lambda a, nr=nr: a[:nr], o)

@@ -31,6 +31,8 @@ import numpy as np
 
 from ..core.engine import TRACE_COUNTS, portfolio_totals
 from ..core.explorer import pareto_front
+from ..obs import jaxhooks
+from ..obs.trace import TRACER as _TRACER
 from .evaluate import (CandidateResult, ChunkedEvaluator, _fused_risk_draws,
                        _fused_totals)
 from .space import Candidate, DesignSpace, EncoderMeta
@@ -251,11 +253,13 @@ def _gen_step():
     global _GEN_STEP
     if _GEN_STEP is None:
         donate = (2,) if jax.default_backend() != "cpu" else ()
-        _GEN_STEP = jax.jit(
-            _gen_step_impl,
-            static_argnames=("meta", "flow", "population", "elite",
-                             "jump_prob", "n_draws", "quantile"),
-            donate_argnums=donate)
+        _GEN_STEP = jaxhooks.instrument(
+            jax.jit(
+                _gen_step_impl,
+                static_argnames=("meta", "flow", "population", "elite",
+                                 "jump_prob", "n_draws", "quantile"),
+                donate_argnums=donate),
+            "search.gen_step", trace_key="gen_step", counts=TRACE_COUNTS)
     return _GEN_STEP
 
 
@@ -302,14 +306,16 @@ def portfolio_search(space: DesignSpace, key, *,
     history: List[Dict] = []
     best_obj, best_idx = np.inf, -1
     for gen in range(generations):
-        k_loop, k_gen = jax.random.split(k_loop)
-        pop_out, pop_next, gen_idx, gen_obj = step(
-            enc.tables, k_gen, pop, qty, mc_key, sig, meta=enc.meta,
-            flow=flow, population=population, elite=elite,
-            jump_prob=float(jump_prob), n_draws=n_draws, quantile=quantile)
-        # one host sync per generation: the priced population + gen best
-        pop_h, gen_idx, gen_obj = jax.device_get(
-            (pop_out, gen_idx, gen_obj))
+        with _TRACER.span("generation", gen=gen):
+            k_loop, k_gen = jax.random.split(k_loop)
+            pop_out, pop_next, gen_idx, gen_obj = step(
+                enc.tables, k_gen, pop, qty, mc_key, sig, meta=enc.meta,
+                flow=flow, population=population, elite=elite,
+                jump_prob=float(jump_prob), n_draws=n_draws,
+                quantile=quantile)
+            # one host sync per generation: priced population + gen best
+            pop_h, gen_idx, gen_obj = jax.device_get(
+                (pop_out, gen_idx, gen_obj))
         seen.update(int(i) for i in pop_h)
         if float(gen_obj) < best_obj:
             best_obj, best_idx = float(gen_obj), int(gen_idx)

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 
 from ..core.batch import SystemBatch
 from ..core.engine import TRACE_COUNTS, _re_impl, _total_impl
+from ..obs import jaxhooks
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,8 +112,9 @@ def mc_re_totals_impl(batch: SystemBatch, key, sig, flow: str,
     return jax.vmap(one)(jax.random.split(key, n_draws))
 
 
-_MC_JIT = jax.jit(_mc_impl,
-                  static_argnames=("flow", "n_draws", "correlated"))
+_MC_JIT = jaxhooks.instrument(
+    jax.jit(_mc_impl, static_argnames=("flow", "n_draws", "correlated")),
+    "dse.mc", trace_key="mc", counts=TRACE_COUNTS)
 
 
 def mc_totals(batch: SystemBatch, key, *, n_draws: int = 128,
@@ -163,7 +165,9 @@ def _sens_impl(batch: SystemBatch, flow: str, params: Tuple[str, ...]):
     return out
 
 
-_SENS_JIT = jax.jit(_sens_impl, static_argnames=("flow", "params"))
+_SENS_JIT = jaxhooks.instrument(
+    jax.jit(_sens_impl, static_argnames=("flow", "params")),
+    "dse.sens", trace_key="sens", counts=TRACE_COUNTS)
 
 
 def sensitivities(batch: SystemBatch, flow: str = "chip-last",

@@ -1,0 +1,75 @@
+"""repro.obs — stack-wide observability: span tracing, metrics, JAX
+cost attribution, and the service flight recorder.
+
+The paper's argument is quantitative cost attribution; this package
+applies the same discipline to the stack's own compute cost.  Four
+surfaces, used by engine, DSE, search and service alike:
+
+* :mod:`repro.obs.trace` — nestable labeled spans (``pack`` /
+  ``jit_compile`` / ``kernel_dispatch`` / ``device_get`` / ``chunk`` /
+  ``generation`` / ``tick``), exportable as Chrome/Perfetto
+  ``trace_event`` JSON and aggregate per-phase wall tables;
+* :mod:`repro.obs.registry` — named counters/gauges/histograms with
+  JSON + Prometheus-style text exposition (and the ``TRACE_COUNTS``
+  compatibility shim);
+* :mod:`repro.obs.jaxhooks` — per-signature compile-vs-dispatch
+  attribution of the module-level jit entry points plus a
+  ``jax.device_get`` transfer hook;
+* :mod:`repro.obs.flight` — the service's bounded black-box ring,
+  dumped as a trace file on error or on demand.
+
+Tracing is **off by default and zero-cost when off**; turn it on with
+``REPRO_TRACE=1`` in the environment or :func:`enable`.  It never adds
+host syncs and never retraces a warmed signature (pinned by the
+trace-count oracle in ``tests/test_obs.py``).
+"""
+from __future__ import annotations
+
+from . import jaxhooks
+from .flight import FlightRecorder
+from .registry import (Counter, Gauge, Histogram, REGISTRY, Registry,
+                       TraceCounts)
+from .trace import TRACER, Tracer, span
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Registry", "REGISTRY", "TraceCounts",
+    "Tracer", "TRACER", "span", "FlightRecorder", "jaxhooks",
+    "enabled", "enable", "disable", "export_chrome", "phase_table",
+]
+
+
+def enabled() -> bool:
+    """Is the observability layer currently recording?"""
+    return TRACER.enabled()
+
+
+def enable(on: bool = True):
+    """Turn span tracing + the jit probes + the device_get hook on/off
+    at runtime (the programmatic twin of ``REPRO_TRACE=1``)."""
+    TRACER.enable(on)
+    if on:
+        jaxhooks.install_device_get_hook()
+    else:
+        jaxhooks.uninstall_device_get_hook()
+
+
+def disable():
+    enable(False)
+
+
+def export_chrome(path):
+    """Write everything the span tracer collected as a Chrome/Perfetto
+    ``trace_event`` JSON file."""
+    return TRACER.export_chrome(path)
+
+
+def phase_table():
+    """Aggregate per-phase wall table (count/total/mean/max seconds)."""
+    return TRACER.phase_table()
+
+
+# REPRO_TRACE=1 in the environment enables the full layer at import —
+# the tracer itself already read the env var; finish the job by
+# installing the device_get hook.
+if TRACER.enabled():
+    jaxhooks.install_device_get_hook()

@@ -1,0 +1,234 @@
+"""JAX cost attribution: per-signature compile/dispatch probes and a
+``jax.device_get`` hook.
+
+The stack's hot paths are module-level ``jax.jit`` entry points
+(``repro.core.engine``, ``repro.dse.evaluate`` / ``search`` /
+``uncertainty``).  :func:`instrument` wraps each of them in a
+:class:`JitProbe` that attributes every call's host-side wall to either
+**jit_compile** (the call traced — detected via the impl body's
+``TRACE_COUNTS`` key, which only increments while jax executes the
+Python body) or **kernel_dispatch** (steady state), keyed by the call's
+argument *signature* (leaf shapes/dtypes + static arguments).  That
+turns "zero hot-path recompiles" from an asserted invariant into a
+measured, queryable one: ``stats()`` reports compiles per signature and
+:func:`recompiles_since` / the tracer's ``jit_compile``-inside-``tick``
+count expose any warm-path retrace.
+
+:func:`install_device_get_hook` wraps ``jax.device_get`` so every
+device->host sync is counted and its transferred bytes summed — the
+third axis (transfer) next to compile and dispatch.
+
+Everything is **off while tracing is off**: probes forward with a single
+predicate check, and the device_get hook is only installed by
+:func:`repro.obs.enable`.  Probes never call ``block_until_ready`` —
+dispatch time is the host-side dispatch wall, device waits show up where
+they always did, in ``device_get``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from time import perf_counter
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
+
+import jax
+
+from . import trace
+from .registry import REGISTRY
+
+
+@dataclasses.dataclass
+class SignatureStats:
+    """Wall attribution of one (probe, argument-signature) pair."""
+
+    compiles: int = 0
+    compile_s: float = 0.0
+    calls: int = 0              # post-compile (steady-state) calls
+    dispatch_s: float = 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+def _leaf_sig(leaf) -> Any:
+    # Keep this fast: it runs per probe call on every pytree leaf.
+    # dtype objects hash/compare fine and avoid str(dtype) (~3us each);
+    # statics are hashable by jit's own contract.
+    shape = getattr(leaf, "shape", None)
+    if shape is not None and hasattr(leaf, "dtype"):
+        return (tuple(shape), leaf.dtype)
+    try:
+        return (type(leaf).__name__, hash(leaf))
+    except TypeError:
+        return repr(leaf)[:80]
+
+
+class JitProbe:
+    """Transparent wrapper over a jitted callable (see module docstring).
+
+    ``trace_key`` names the ``TRACE_COUNTS`` entry the wrapped function's
+    Python body increments; a call that bumps it was a (re)trace.  With
+    no ``trace_key``, a first call per signature counts as the compile.
+    """
+
+    def __init__(self, fn: Callable, name: str,
+                 trace_key: Optional[str] = None,
+                 counts: Optional[Mapping] = None):
+        self.fn = fn
+        self.name = name
+        self.trace_key = trace_key
+        self.counts = counts if counts is not None else {}
+        self.stats: Dict[Any, SignatureStats] = {}
+        m = self._mname
+        self._counter_names = (f"jit_{m}_compiles", f"jit_{m}_compile_s",
+                               f"jit_{m}_calls", f"jit_{m}_dispatch_s")
+        _PROBES.append(self)
+
+    def __call__(self, *args, **kwargs):
+        if not trace.TRACER.enabled():
+            return self.fn(*args, **kwargs)
+        before = self.counts.get(self.trace_key, 0) if self.trace_key \
+            else 0
+        # the signature walk is inside the timed window on purpose: it is
+        # tracing-induced dispatch cost and must show up as covered span
+        # wall, not as an unattributed hole in the tick.
+        t0 = perf_counter()
+        out = self.fn(*args, **kwargs)
+        sig = self._signature(args, kwargs)
+        dt = perf_counter() - t0
+        if self.trace_key:
+            compiled = self.counts.get(self.trace_key, 0) > before
+        else:
+            compiled = sig not in self.stats
+        st = self.stats.setdefault(sig, SignatureStats())
+        n_compiles, n_compile_s, n_calls, n_dispatch_s = self._counter_names
+        if compiled:
+            st.compiles += 1
+            st.compile_s += dt
+            trace.TRACER.add_complete("jit_compile", dt, fn=self.name)
+            REGISTRY.counter(n_compiles).inc()
+            REGISTRY.counter(n_compile_s).inc(dt)
+        else:
+            st.calls += 1
+            st.dispatch_s += dt
+            trace.TRACER.add_complete("kernel_dispatch", dt, fn=self.name)
+            REGISTRY.counter(n_calls).inc()
+            REGISTRY.counter(n_dispatch_s).inc(dt)
+        return out
+
+    @property
+    def _mname(self) -> str:
+        return self.name.replace(".", "_").replace("-", "_")
+
+    @staticmethod
+    def _signature(args, kwargs) -> Tuple:
+        leaves, _ = jax.tree_util.tree_flatten((args, kwargs))
+        return tuple(_leaf_sig(l) for l in leaves)
+
+    def summary(self) -> Dict[str, float]:
+        """Aggregate over signatures: total compiles / walls / calls."""
+        out = {"signatures": len(self.stats), "compiles": 0,
+               "compile_s": 0.0, "calls": 0, "dispatch_s": 0.0}
+        for st in self.stats.values():
+            out["compiles"] += st.compiles
+            out["compile_s"] += st.compile_s
+            out["calls"] += st.calls
+            out["dispatch_s"] += st.dispatch_s
+        return out
+
+    def reset(self):
+        self.stats.clear()
+
+
+_PROBES: List[JitProbe] = []
+
+
+def instrument(fn: Callable, name: str, trace_key: Optional[str] = None,
+               counts: Optional[Mapping] = None) -> JitProbe:
+    """Wrap a jitted entry point in a :class:`JitProbe` (registered for
+    :func:`stats` aggregation)."""
+    return JitProbe(fn, name, trace_key=trace_key, counts=counts)
+
+
+def probes() -> List[JitProbe]:
+    return list(_PROBES)
+
+
+def stats() -> Dict[str, Dict[str, float]]:
+    """Per-probe compile/dispatch attribution (aggregated signatures)."""
+    return {p.name: p.summary() for p in _PROBES}
+
+
+def reset():
+    """Clear all probe stats and the warm-compile marker."""
+    for p in _PROBES:
+        p.reset()
+
+
+def total_compiles() -> int:
+    return sum(p.summary()["compiles"] for p in _PROBES)
+
+
+def recompiles_since(marker: int) -> int:
+    """Compiles measured since a ``total_compiles()`` marker — the
+    queryable "recompiles after warmup" invariant."""
+    return total_compiles() - marker
+
+
+# ---------------------------------------------------------------------------
+# device_get hook: count syncs + transferred bytes
+# ---------------------------------------------------------------------------
+
+_ORIG_DEVICE_GET: Optional[Callable] = None
+
+
+def _tree_nbytes(x) -> int:
+    leaves, _ = jax.tree_util.tree_flatten(x)
+    return sum(int(getattr(l, "nbytes", 0)) for l in leaves)
+
+
+def install_device_get_hook():
+    """Patch ``jax.device_get`` so every device->host transfer records a
+    ``device_get`` span plus call/byte counters.  Idempotent."""
+    global _ORIG_DEVICE_GET
+    if _ORIG_DEVICE_GET is not None:
+        return
+    orig = jax.device_get
+    _ORIG_DEVICE_GET = orig
+    calls = REGISTRY.counter("device_get_calls",
+                             help="jax.device_get invocations")
+    nbytes = REGISTRY.counter("device_get_bytes",
+                              help="bytes transferred device->host")
+    wall = REGISTRY.counter("device_get_s",
+                            help="wall seconds inside jax.device_get")
+
+    def traced_device_get(x):
+        t0 = perf_counter()
+        out = orig(x)
+        dt = perf_counter() - t0
+        b = _tree_nbytes(out)
+        trace.TRACER.add_complete("device_get", dt, bytes=b)
+        calls.inc()
+        nbytes.inc(b)
+        wall.inc(dt)
+        return out
+
+    traced_device_get._repro_obs_hook = True
+    jax.device_get = traced_device_get
+
+
+def uninstall_device_get_hook():
+    """Restore the original ``jax.device_get``."""
+    global _ORIG_DEVICE_GET
+    if _ORIG_DEVICE_GET is not None:
+        jax.device_get = _ORIG_DEVICE_GET
+        _ORIG_DEVICE_GET = None
+
+
+def device_get_stats() -> Dict[str, float]:
+    """Totals collected by the device_get hook (zeros if never installed)."""
+    def val(name):
+        m = REGISTRY.get(name)
+        return m.get() if m is not None else 0.0
+    return {"calls": int(val("device_get_calls")),
+            "bytes": int(val("device_get_bytes")),
+            "total_s": val("device_get_s")}

@@ -6,10 +6,17 @@ Three measurement surfaces:
 * **requests** — submit -> first-result -> done latencies per request
   (the continuous-batching promise: point queries stay fast while sweeps
   stream), split by request kind.
-* **ticks** — slot occupancy vs padded waste per device tick, plus the
+* **ticks** — slot occupancy vs padded waste per device tick — reported
+  **per lane** (chunk / mc / gen / raw) and in aggregate, so search
+  (``gen``) work is no longer a blind spot — plus the
   one-``device_get``-per-tick invariant counter.
 * **caches/traces** — result-cache hit rates and post-warmup recompile
   counts (folded in from the cache layer at snapshot time).
+
+Every counter is also mirrored into the stack-wide
+:data:`repro.obs.registry.REGISTRY` (``service_*`` instruments), so one
+text/JSON scrape of the registry sees the service next to the engine's
+trace counters and the jit probes.
 """
 from __future__ import annotations
 
@@ -20,6 +27,8 @@ import time
 from typing import Dict, List, Optional
 
 import numpy as np
+
+from ..obs.registry import REGISTRY
 
 
 @dataclasses.dataclass
@@ -51,6 +60,30 @@ def _quantiles(xs: List[float]) -> Dict[str, float]:
             "mean": float(a.mean())}
 
 
+@dataclasses.dataclass
+class LaneStats:
+    """Per-lane tick accounting (one row per lane kind)."""
+
+    ticks: int = 0
+    slots_used: int = 0
+    slots_total: int = 0
+    rows_priced: int = 0
+    busy_s: float = 0.0
+
+    @property
+    def occupancy(self) -> float:
+        return self.slots_used / self.slots_total if self.slots_total \
+            else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"ticks": self.ticks, "slots_used": self.slots_used,
+                "slots_total": self.slots_total,
+                "rows_priced": self.rows_priced, "busy_s": self.busy_s,
+                "occupancy": self.occupancy,
+                "padded_waste_frac": (1.0 - self.occupancy
+                                      if self.slots_total else 0.0)}
+
+
 class ServiceMetrics:
     """Mutable counters owned by one :class:`PricingService`."""
 
@@ -68,7 +101,7 @@ class ServiceMetrics:
         self.gen_ticks = 0
         self.rows_priced = 0                 # candidate rows through kernels
         self.busy_s = 0.0                    # wall inside ticks
-        self.per_lane_ticks: Dict[str, int] = {}
+        self.per_lane: Dict[str, LaneStats] = {}
         self.t_start = time.perf_counter()
 
     # -- request lifecycle ---------------------------------------------------
@@ -76,10 +109,14 @@ class ServiceMetrics:
                       t_submit: float) -> RequestRecord:
         rec = RequestRecord(kind=kind, n_rows=n_rows, t_submit=t_submit)
         self.requests.append(rec)
+        REGISTRY.counter("service_requests",
+                         help="requests submitted").inc()
         return rec
 
     def reject(self):
         self.n_rejected += 1
+        REGISTRY.counter("service_rejected",
+                         help="backpressure rejections").inc()
 
     def finish_request(self, rec: RequestRecord, ok: bool,
                        cached: bool = False):
@@ -90,21 +127,38 @@ class ServiceMetrics:
         rec.cached = cached
         if not ok:
             self.n_errors += 1
+            REGISTRY.counter("service_errors",
+                             help="requests finished not-ok").inc()
+        else:
+            REGISTRY.histogram("service_latency_s",
+                               help="ok-request latency").observe(
+                rec.latency_s)
 
     # -- tick accounting -----------------------------------------------------
     def record_tick(self, lane_kind: str, slots: int, used: int,
                     rows_priced: int, wall_s: float):
+        """One device tick.  ``gen`` lanes price their whole population
+        every tick, so callers pass ``slots == used == rows_priced`` for
+        them — search work counts toward occupancy and rows like every
+        other lane instead of being silently excluded."""
         self.ticks += 1
         self.device_gets += 1        # the tick loop does exactly one get
         self.busy_s += wall_s
         self.rows_priced += rows_priced
-        self.per_lane_ticks[lane_kind] = \
-            self.per_lane_ticks.get(lane_kind, 0) + 1
+        self.slots_used += used
+        self.slots_total += slots
+        lane = self.per_lane.setdefault(lane_kind, LaneStats())
+        lane.ticks += 1
+        lane.slots_used += used
+        lane.slots_total += slots
+        lane.rows_priced += rows_priced
+        lane.busy_s += wall_s
         if lane_kind == "gen":
             self.gen_ticks += 1
-        else:
-            self.slots_used += used
-            self.slots_total += slots
+        REGISTRY.counter("service_ticks", help="device ticks").inc()
+        REGISTRY.counter("service_rows_priced",
+                         help="candidate rows priced").inc(rows_priced)
+        REGISTRY.counter(f"service_ticks_{lane_kind}").inc()
 
     # -- snapshot ------------------------------------------------------------
     def snapshot(self, trace_stats: Optional[Dict] = None,
@@ -125,7 +179,8 @@ class ServiceMetrics:
             "ticks": self.ticks,
             "device_gets": self.device_gets,
             "gen_ticks": self.gen_ticks,
-            "ticks_by_lane": dict(self.per_lane_ticks),
+            "ticks_by_lane": {k: v.ticks for k, v in self.per_lane.items()},
+            "per_lane": {k: v.as_dict() for k, v in self.per_lane.items()},
             "slot_occupancy": (self.slots_used / self.slots_total
                                if self.slots_total else 0.0),
             "padded_waste_frac": (1.0 - self.slots_used / self.slots_total

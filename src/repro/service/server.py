@@ -47,6 +47,9 @@ from ..dse.evaluate import _CHUNK_JIT, _CHUNK_MC_JIT, ChunkedEvaluator, \
 from ..dse.search import SearchResult, _default_mc_key, _front, _gen_step, \
     _rank
 from ..dse.space import ArchChoice, Candidate, DesignSpace
+from ..obs import jaxhooks
+from ..obs.flight import FlightRecorder
+from ..obs.trace import TRACER as _TRACER
 from .cache import LaneSignature, ResultCache, TraceCache, space_fingerprint
 from .metrics import RequestRecord, ServiceMetrics
 from .protocol import INTERNAL_ERROR, INVALID_REQUEST, QUEUE_FULL, McSpec, \
@@ -93,6 +96,7 @@ class ServiceConfig:
     warm_mc: Tuple[Tuple[int, Tuple[float, ...]], ...] = ((128, (0.5, 0.9)),)
     warm_search: Tuple[SearchWarmup, ...] = ()
     log_keep: int = 1024
+    flight_capacity: int = 2048        # flight-recorder ring (always on)
 
 
 @dataclasses.dataclass(eq=False)
@@ -219,6 +223,7 @@ class PricingService:
                                raw_slots=self.cfg.raw_slots,
                                max_pending=self.cfg.max_pending)
         self.metrics = ServiceMetrics()
+        self.flight = FlightRecorder(capacity=self.cfg.flight_capacity)
         self.log = log or RequestLog(keep=self.cfg.log_keep)
         self.traces = TraceCache()
         self.results = ResultCache(self.cfg.result_cache_entries,
@@ -702,20 +707,29 @@ class PricingService:
             return False
         t0 = time.perf_counter()
         before = self.traces.counts()
-        try:
-            if plan.gen is not None:
-                rows = self._tick_gen(plan)
-            elif plan.lane.kind == "raw":
-                rows = self._tick_raw(plan)
-            else:
-                rows = self._tick_chunk(plan)
-        except Exception as e:  # fail the tick's owners, keep serving
-            self._fail_tick(plan, e)
-            rows = 0
+        with _TRACER.span("tick", lane=plan.lane.kind):
+            try:
+                if plan.gen is not None:
+                    rows = self._tick_gen(plan)
+                elif plan.lane.kind == "raw":
+                    rows = self._tick_raw(plan)
+                else:
+                    rows = self._tick_chunk(plan)
+            except Exception as e:  # fail the tick's owners, keep serving
+                self._fail_tick(plan, e)
+                rows = 0
         recompiled = self.traces.meter_tick(before)
         wall = time.perf_counter() - t0
-        self.metrics.record_tick(plan.lane.kind, plan.slots, plan.used,
-                                 rows, wall)
+        # gen lanes price their whole population every tick: count those
+        # rows as fully-occupied slots so search work shows up in
+        # occupancy instead of being excluded (see ServiceMetrics).
+        slots, used = plan.slots, plan.used
+        if plan.lane.kind == "gen":
+            slots = used = rows
+        self.metrics.record_tick(plan.lane.kind, slots, used, rows, wall)
+        self.flight.record("tick", lane=plan.lane.kind, slots=slots,
+                           used=used, rows=rows, wall_s=wall,
+                           recompiled=bool(recompiled))
         if recompiled:
             self.log.event(-1, "tick_recompile", lane=plan.lane.kind,
                            traces=recompiled)
@@ -730,6 +744,13 @@ class PricingService:
         return owners
 
     def _fail_tick(self, plan: TickPlan, err: Exception):
+        self.flight.record("tick_error", lane=plan.lane.kind,
+                           error=f"{type(err).__name__}: {err}")
+        if FlightRecorder.auto_dump_dir() is not None:
+            try:
+                self.dump_flight_recorder()
+            except OSError:
+                pass                      # never let a dump kill serving
         seen = set()
         for owner in self._owners(plan):
             if id(owner) in seen:
@@ -740,13 +761,14 @@ class PricingService:
 
     def _tick_chunk(self, plan: TickPlan) -> int:
         k = self.cfg.chunk
-        chunk_idx = np.zeros((k,), np.int64)
-        for a in plan.assignments:
-            chunk_idx[a.slot:a.slot + a.n] = \
-                a.item.idx[a.start:a.start + a.n]
-        if plan.used < k and plan.assignments:
-            chunk_idx[plan.used:] = chunk_idx[0]   # cost-neutral padding
-        dev = jnp.asarray(chunk_idx, jnp.int32)
+        with _TRACER.span("pack", used=plan.used):
+            chunk_idx = np.zeros((k,), np.int64)
+            for a in plan.assignments:
+                chunk_idx[a.slot:a.slot + a.n] = \
+                    a.item.idx[a.start:a.start + a.n]
+            if plan.used < k and plan.assignments:
+                chunk_idx[plan.used:] = chunk_idx[0]  # cost-neutral padding
+            dev = jnp.asarray(chunk_idx, jnp.int32)
         if plan.lane.kind == "mc":
             key, sig, draws, quantiles = self._lane_args[plan.lane]
             out = _CHUNK_MC_JIT(self.enc.tables, dev, self.qty, key, sig,
@@ -779,6 +801,8 @@ class PricingService:
                 req.on_partial(req.rows_done, req.n_rows)
             if req.rows_done >= req.n_rows:
                 self._finish_sweep(req)
+        if _TRACER.enabled():
+            _TRACER.add_complete("scatter", time.perf_counter() - now)
         return plan.used
 
     def _tick_gen(self, plan: TickPlan) -> int:
@@ -787,40 +811,42 @@ class PricingService:
         if req.failed:
             return 0
         task = work.task
-        try:
-            out = task.device_call()
-            host = jax.device_get(out)             # THE tick sync
-        except Exception as e:
-            self._fail(req, INTERNAL_ERROR, f"{type(e).__name__}: {e}")
-            return 0
-        if not req.rec.t_first:
-            req.rec.t_first = time.perf_counter()
-        done = task.consume(host)
-        if req.on_partial is not None:
-            req.on_partial(task.gen, task.sr.generations)
-        if done:
-            self._enqueue_search_rank(req)
-        else:
-            self.sched.push(work)
+        with _TRACER.span("generation", gen=task.gen):
+            try:
+                out = task.device_call()
+                host = jax.device_get(out)         # THE tick sync
+            except Exception as e:
+                self._fail(req, INTERNAL_ERROR, f"{type(e).__name__}: {e}")
+                return 0
+            if not req.rec.t_first:
+                req.rec.t_first = time.perf_counter()
+            done = task.consume(host)
+            if req.on_partial is not None:
+                req.on_partial(task.gen, task.sr.generations)
+            if done:
+                self._enqueue_search_rank(req)
+            else:
+                self.sched.push(work)
         return task.sr.population
 
     def _tick_raw(self, plan: TickPlan) -> int:
-        groups = list(plan.groups)
-        # combined entity tables must fit the padded signature; shed the
-        # newest groups back to the queue head until they do.
-        while groups:
-            systems, gids = [], []
-            for gi, g in enumerate(groups):
-                systems += g.systems
-                gids += [gi] * g.n_systems
-            batch = SystemBatch.from_systems(systems, share_nre=gids,
-                                             max_chips=self.raw_max_chips)
-            if self._raw_fits(batch):
-                break
-            self.sched.queue.appendleft(groups.pop())
-        if not groups:
-            return 0
-        padded = pad_batch(batch, **self.raw_pad)
+        with _TRACER.span("pack", lane="raw"):
+            groups = list(plan.groups)
+            # combined entity tables must fit the padded signature; shed
+            # the newest groups back to the queue head until they do.
+            while groups:
+                systems, gids = [], []
+                for gi, g in enumerate(groups):
+                    systems += g.systems
+                    gids += [gi] * g.n_systems
+                batch = SystemBatch.from_systems(
+                    systems, share_nre=gids, max_chips=self.raw_max_chips)
+                if self._raw_fits(batch):
+                    break
+                self.sched.queue.appendleft(groups.pop())
+            if not groups:
+                return 0
+            padded = pad_batch(batch, **self.raw_pad)
         host = jax.device_get(_TOTAL_JIT(padded, plan.lane.flow))  # THE sync
         now = time.perf_counter()
         total = np.asarray(host.total, np.float64)
@@ -842,6 +868,8 @@ class PricingService:
             req.rec.t_first = req.rec.t_first or now
             req.rows_done = req.n_rows
             self._finish(req, SystemsResult(rows=rows))
+        if _TRACER.enabled():
+            _TRACER.add_complete("scatter", time.perf_counter() - now)
         return off
 
     # ------------------------------------------------------------------
@@ -864,6 +892,8 @@ class PricingService:
         self.sched.release(req.cost)
         self._active.pop(req.uid, None)
         self.log.event(req.uid, "done", rows=req.n_rows)
+        self.flight.record("request", uid=req.uid, kind=req.kind,
+                           rows=req.n_rows, wall_s=req.rec.latency_s)
         if not req.future.done():
             req.future.set_result(Response(
                 request_id=req.uid, kind=req.kind, ok=True, result=payload,
@@ -879,6 +909,8 @@ class PricingService:
         self.metrics.finish_request(req.rec, ok=False)
         self._active.pop(req.uid, None)
         self.log.event(req.uid, "error", code=code, message=message)
+        self.flight.record("request_error", uid=req.uid, kind=req.kind,
+                           code=code, error=message)
         if not req.future.done():
             req.future.set_result(error_response(
                 req.uid, req.kind, code, message, req.rec.t_submit))
@@ -889,9 +921,33 @@ class PricingService:
 
     def snapshot(self) -> Dict:
         """JSON-ready metrics snapshot (latency, occupancy, caches,
-        recompiles) — the surface the bench and CI assert on."""
-        return self.metrics.snapshot(trace_stats=self.traces.stats(),
+        recompiles) — the surface the bench and CI assert on.  When
+        tracing is on (``REPRO_TRACE=1`` / ``obs.enable()``) the snapshot
+        also carries the per-phase wall table, per-jit compile/dispatch
+        attribution and ``device_get`` stats."""
+        snap = self.metrics.snapshot(trace_stats=self.traces.stats(),
                                      cache_stats=self.results.stats())
+        if _TRACER.enabled():
+            snap["obs"] = {
+                "phases": _TRACER.phase_table(),
+                "tick_coverage": _TRACER.coverage("tick"),
+                "jit": jaxhooks.stats(),
+                "device_get": jaxhooks.device_get_stats(),
+                "recompiles_in_ticks": (
+                    _TRACER.count("jit_compile", parent="tick")
+                    + _TRACER.count("jit_compile", parent="generation")
+                    + _TRACER.count("jit_compile", parent="pack")),
+            }
+        return snap
+
+    def dump_flight_recorder(self, path=None):
+        """Dump the flight recorder — and, when tracing is on, every
+        tracer span — as one Chrome/Perfetto ``trace_event`` JSON file.
+        Called automatically on tick failure when ``REPRO_FLIGHT_DIR``
+        is set; callable any time for a live look at recent ticks.
+        Returns the written path."""
+        extra = _TRACER.chrome_events() if _TRACER.enabled() else None
+        return self.flight.dump(path, extra_events=extra)
 
 
 def serve(space: DesignSpace, requests: Sequence[Request],
