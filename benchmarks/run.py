@@ -12,10 +12,10 @@ import time
 
 
 def main() -> None:
-    from . import (ablations, codesign, dse_bench, engine_bench,
-                   fig2_yield_cost, fig4_re_integration, fig5_amd,
-                   fig6_single_system, fig8_scms, fig9_ocme, fig10_fsmc,
-                   kernels_bench, roofline, service_bench)
+    from . import (ablations, chaos_bench, codesign, dse_bench,
+                   engine_bench, fig2_yield_cost, fig4_re_integration,
+                   fig5_amd, fig6_single_system, fig8_scms, fig9_ocme,
+                   fig10_fsmc, kernels_bench, roofline, service_bench)
 
     benches = [
         ("fig2", fig2_yield_cost), ("fig4", fig4_re_integration),
@@ -25,6 +25,9 @@ def main() -> None:
         ("roofline", roofline), ("codesign", codesign),
         ("kernels", kernels_bench), ("engine", engine_bench),
         ("dse", dse_bench), ("service", service_bench),
+        # chaos goes LAST: it force-clears fused jit caches and injects
+        # faults into its own service — nothing downstream to perturb.
+        ("chaos", chaos_bench),
     ]
     failures = 0
     for name, mod in benches:

@@ -9,10 +9,19 @@ committed ``benchmarks/baselines/BENCH_<name>.json``:
 * throughput keys must stay within ``--min-ratio`` of the baseline
   (generous by default: CI boxes are noisy and shared, so the guard
   catches order-of-magnitude regressions, not jitter);
-* absolute floors/ceilings (speedup ratios, parity errors) are enforced
-  exactly — these are correctness-adjacent and machine-independent.
+* absolute floors/ceilings (speedup ratios, parity errors, chaos
+  survival invariants) are enforced exactly — these are
+  correctness-adjacent and machine-independent.
 
-Exit code 1 on any violation; prints a per-key PASS/FAIL table.
+Exit codes are typed so CI can tell "the code got slower" from "the
+guard could not run":
+
+* ``0`` — every rule passed;
+* ``1`` — a rule failed (a real regression);
+* ``2`` — infrastructure error: a BENCH/baseline file is missing,
+  truncated, or unparseable, or an unknown benchmark name was given.
+  Printed as a one-line ``MISSING``/``UNREADABLE`` diagnosis — never a
+  traceback.
 """
 from __future__ import annotations
 
@@ -22,7 +31,9 @@ import pathlib
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
-BASELINES = ROOT / "benchmarks" / "baselines"
+
+# Per-check outcome severities; main() exits with the worst one seen.
+OK, FAIL, ERROR = 0, 1, 2
 
 # (key, kind, threshold): kind "ratio" compares against min_ratio *
 # baseline[key]; "min"/"max" are machine-independent absolute bounds.
@@ -45,40 +56,72 @@ RULES = {
         ("agg_candidates_per_sec", "ratio", None),
         ("recompiles_after_warmup", "max", 0.0),
     ],
+    "chaos": [
+        # Survival invariants of the seeded fault schedule (see
+        # benchmarks/chaos_bench.py): every induced fault must land as a
+        # typed envelope or a correct degraded response, with zero
+        # cross-request contamination and one flight recording per
+        # induced stall.  All machine-independent.
+        ("survived", "min", 1.0),
+        ("loop_errors", "max", 0.0),
+        ("contaminated_rows", "max", 0.0),
+        ("untyped_errors", "max", 0.0),
+        ("stall_dump_deficit", "max", 0.0),
+        ("fault_kinds_injected", "min", 5.0),
+    ],
 }
 
 
-def check(name: str, min_ratio: float) -> bool:
+def _load(path: pathlib.Path, name: str, role: str):
+    """Read one BENCH json; (payload, OK) or (None, ERROR) with a
+    one-line diagnosis — a missing or truncated file must read as an
+    infrastructure problem, not a traceback or a fake regression."""
+    if not path.exists():
+        hint = ("run the benchmark first" if role == "run"
+                else f"commit one (copy a trusted BENCH_{name}.json there)")
+        print(f"[{name}] MISSING {role} file {path} — {hint}")
+        return None, ERROR
+    try:
+        payload = json.loads(path.read_text())
+    except (OSError, UnicodeDecodeError, json.JSONDecodeError) as e:
+        print(f"[{name}] UNREADABLE {role} file {path} — {e} "
+              f"(truncated or corrupt? re-run the benchmark)")
+        return None, ERROR
+    if not isinstance(payload, dict):
+        print(f"[{name}] UNREADABLE {role} file {path} — expected a JSON "
+              f"object, got {type(payload).__name__}")
+        return None, ERROR
+    return payload, OK
+
+
+def check(name: str, min_ratio: float, root: pathlib.Path) -> int:
+    """Run one benchmark's rules; returns OK / FAIL / ERROR."""
     if name not in RULES:
         print(f"[{name}] UNKNOWN benchmark — known: {sorted(RULES)}")
-        return False
-    cur_path = ROOT / f"BENCH_{name}.json"
-    base_path = BASELINES / f"BENCH_{name}.json"
-    if not cur_path.exists():
-        print(f"[{name}] MISSING {cur_path} — run the benchmark first")
-        return False
-    if not base_path.exists():
-        print(f"[{name}] MISSING baseline {base_path} — commit one "
-              f"(copy a trusted BENCH_{name}.json there)")
-        return False
-    cur = json.loads(cur_path.read_text())
-    base = json.loads(base_path.read_text())
-    ok = True
+        return ERROR
+    cur, status = _load(root / f"BENCH_{name}.json", name, "run")
+    if status:
+        return status
+    base, status = _load(root / "benchmarks" / "baselines" /
+                         f"BENCH_{name}.json", name, "baseline")
+    if status:
+        return status
+    worst = OK
     failures = []
     for key, kind, bound in RULES[name]:
         if key not in cur:
-            print(f"[{name}] FAIL {key} MISSING from {cur_path.name} "
+            print(f"[{name}] FAIL {key} MISSING from the current run "
                   f"(rule {kind}) — did the benchmark finish?")
             failures.append((key, "missing from current run"))
-            ok = False
+            worst = max(worst, FAIL)
             continue
         have = float(cur[key])
         if kind == "ratio":
             if key not in base:
                 print(f"[{name}] FAIL {key} MISSING from baseline "
-                      f"{base_path.name} — re-commit the baseline")
+                      f"— re-commit the baseline")
                 failures.append((key, "missing from baseline"))
-                ok = False
+                worst = max(worst, FAIL)
                 continue
             want = min_ratio * float(base[key])
             good = have >= want
@@ -100,10 +143,10 @@ def check(name: str, min_ratio: float) -> bool:
               f"(need {detail})" + (f" — {miss}" if miss else ""))
         if not good:
             failures.append((key, miss))
-        ok &= good
+            worst = max(worst, FAIL)
     for key, why in failures:
         print(f"[{name}] RULE FAILED: {key} — {why}")
-    return ok
+    return worst
 
 
 def main() -> int:
@@ -111,11 +154,17 @@ def main() -> int:
     ap.add_argument("names", nargs="*", default=list(RULES))
     ap.add_argument("--min-ratio", type=float, default=0.15,
                     help="throughput floor as a fraction of baseline")
+    ap.add_argument("--root", type=pathlib.Path, default=ROOT,
+                    help="tree holding BENCH_*.json + benchmarks/baselines/"
+                         " (tests point this at a scratch dir)")
     args = ap.parse_args()
-    ok = all(check(n, args.min_ratio) for n in (args.names or list(RULES)))
-    if not ok:
+    worst = max(check(n, args.min_ratio, args.root)
+                for n in (args.names or list(RULES)))
+    if worst == FAIL:
         print("benchmark regression detected")
-    return 0 if ok else 1
+    elif worst == ERROR:
+        print("benchmark guard could not run — see MISSING/UNREADABLE above")
+    return worst
 
 
 if __name__ == "__main__":

@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..resilience.guards import validate_packed_arrays
 from .system import System, spec
 from .technology import node, tech
 
@@ -263,6 +264,17 @@ class SystemBatch:
                         mod_ent.append(_entity(
                             mod_ents, mod_ent_rows, ns + m.name,
                             lambda: (m.area_mm2, m.node.nre_module_per_mm2)))
+
+        # Numerical guardrail at the host/device boundary: a NaN defect
+        # density or a yield of 1.3 here would flow silently through the
+        # whole RE/NRE graph.  from_arrays (the traced encoder path)
+        # skips this — traced values can't be inspected host-side; the
+        # fused kernels guard those rows in-graph via engine.finite_rows.
+        problems = validate_packed_arrays(
+            f, sysf, [s.name for s in systems])
+        if problems:
+            raise ValueError(
+                "invalid system parameters: " + "; ".join(problems))
 
         def arr(x, dt=_FLOAT):
             return jnp.asarray(np.asarray(x, dtype=np.float32

@@ -206,6 +206,25 @@ def portfolio_totals(unit_totals, quantities):
     return (u * q[None, :]).sum(-1)
 
 
+def finite_rows(*arrays) -> jnp.ndarray:
+    """(K,) bool mask: True where every given per-row output is finite.
+
+    Each array is ``(K,)`` or ``(K, ...)`` (trailing axes are reduced).
+    This is the in-graph numerical guardrail the fused chunk kernels
+    append to their outputs: one cheap reduction per tick lets the
+    service fail exactly the rows whose cost math produced NaN/Inf —
+    with a typed ``numerical_error`` — instead of silently returning
+    garbage or failing the whole coalesced tick.
+    """
+    mask = None
+    for a in arrays:
+        m = jnp.isfinite(a)
+        if m.ndim > 1:
+            m = m.reshape(m.shape[0], -1).all(-1)
+        mask = m if mask is None else mask & m
+    return mask
+
+
 def _register(cls, fields: Tuple[str, ...]):
     jax.tree_util.register_pytree_node(
         cls,

@@ -29,7 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.batch import SystemBatch, pad_batch
-from ..core.engine import (CostEngine, TRACE_COUNTS, _re_impl,
+from ..core.engine import (CostEngine, TRACE_COUNTS, _re_impl, finite_rows,
                            portfolio_totals)
 from ..obs import jaxhooks
 from ..obs.trace import TRACER as _TRACER
@@ -123,8 +123,11 @@ def _chunk_impl(tables, idx, qty, *, meta: EncoderMeta, flow: str):
                                               flow=flow)
     k, s = idx.shape[0], meta.n_skus
     unit = total.reshape(k, s)
-    return (unit, re_tot.reshape(k, s), nre_tot.reshape(k, s),
-            portfolio_totals(unit, qty))
+    pf = portfolio_totals(unit, qty)
+    # trailing element: (K,) in-graph numerical guardrail — True where
+    # every per-row output is finite (see engine.finite_rows)
+    return (unit, re_tot.reshape(k, s), nre_tot.reshape(k, s), pf,
+            finite_rows(unit, pf))
 
 
 def _chunk_mc_impl(tables, idx, qty, key, sig, *, meta: EncoderMeta,
@@ -137,8 +140,9 @@ def _chunk_mc_impl(tables, idx, qty, key, sig, *, meta: EncoderMeta,
     pf_draws = _fused_risk_draws(batch, nre_tot, qty, key, sig, flow,
                                  n_draws, s)                 # (draws, K)
     risk = portfolio_risk_stats(pf_draws, quantiles)
-    return (unit, re_tot.reshape(k, s), nre_tot.reshape(k, s),
-            portfolio_totals(unit, qty), risk)
+    pf = portfolio_totals(unit, qty)
+    return (unit, re_tot.reshape(k, s), nre_tot.reshape(k, s), pf, risk,
+            finite_rows(unit, pf, *risk.values()))
 
 
 # Module-level jits with tables passed as (pytree) arguments, so every
@@ -165,6 +169,7 @@ class EvalArrays:
     sku_unit_nre: np.ndarray      # (K, S)
     portfolio_cost: np.ndarray    # (K,) sum_i quantity_i * unit_total_i
     risk: Optional[Dict[str, np.ndarray]] = None   # each (K,)
+    finite: Optional[np.ndarray] = None   # (K,) bool; False = NaN/Inf row
 
     def __len__(self) -> int:
         return self.idx.shape[0]
@@ -314,9 +319,10 @@ class ChunkedEvaluator:
         if mc_key is not None:
             risk = {kk: np.concatenate([o[4][kk] for o in outs], axis=0)
                     for kk in outs[0][4]}
+        finite = np.concatenate([o[-1] for o in outs], axis=0)
         return EvalArrays(idx=idx, sku_unit_total=cat(0), sku_unit_re=cat(1),
                           sku_unit_nre=cat(2), portfolio_cost=cat(3),
-                          risk=risk)
+                          risk=risk, finite=finite)
 
     def results_from_arrays(self, arrays: EvalArrays,
                             candidates: Optional[Sequence[Candidate]] = None,
@@ -392,6 +398,51 @@ class ChunkedEvaluator:
                                          max_chips=self.shape.max_chips)
         return pad_batch(batch, **self.shape.pad_kwargs())
 
+    def _legacy_chunk_host(self, chunk: Sequence[Candidate], mc_key,
+                           mc_draws: int, mc_sigmas) -> Tuple:
+        """Price one candidate chunk through the host-packing path.
+
+        Returns float64 host arrays ``(total, re, nre, pf_draws)`` with
+        the first three ``(len(chunk) * S,)`` per-system rows and
+        ``pf_draws`` a ``(draws, len(chunk))`` portfolio-cost matrix (or
+        None without ``mc_key``).  This is op-for-op the math of the
+        legacy parity oracle — :meth:`_evaluate_legacy` builds its
+        ``CandidateResult`` objects from exactly these values — and it
+        is what the service's degraded mode prices through, so fallback
+        responses are bit-exact float32 casts of oracle float64s.
+        Per-row values are chunk-composition-independent (cost-neutral
+        padding; MC draws are systematic scalar multipliers), so how a
+        tick re-chunks the rows cannot change them.
+        """
+        s = len(self.space.skus)
+        qty = np.asarray([sk.quantity for sk in self.space.skus], np.float64)
+        batch = self.pack_chunk(chunk)
+        dev = [self.engine.total(batch, flow=self.flow)]
+        if mc_key is not None:
+            draws = mc_totals(batch, mc_key, n_draws=mc_draws,
+                              flow=self.flow, sigmas=mc_sigmas)
+            # fold the real (unpadded) rows into per-candidate
+            # portfolio costs: (draws, len(chunk))
+            dev.append(portfolio_draws(draws[:, :len(chunk) * s], qty, s))
+        # every device->host transfer of the chunk in one batched get
+        host = jax.device_get(tuple(dev))
+        tc = host[0]
+        pf_draws = np.asarray(host[1], np.float64) \
+            if mc_key is not None else None
+        return (np.asarray(tc.total, np.float64),
+                np.asarray(tc.re.total, np.float64),
+                np.asarray(tc.nre.total, np.float64), pf_draws)
+
+    @staticmethod
+    def _legacy_risk(pf_col: np.ndarray,
+                     quantiles: Sequence[float]) -> Dict[str, float]:
+        """Host risk stats of one candidate's draw column — shared by the
+        oracle and the degraded path so the two stay bit-identical."""
+        risk = {"mean": float(pf_col.mean()), "std": float(pf_col.std())}
+        for q in quantiles:
+            risk[f"q{int(round(q * 100))}"] = float(np.quantile(pf_col, q))
+        return risk
+
     def _evaluate_legacy(self, candidates, mc_key, mc_draws, mc_sigmas,
                          mc_quantiles) -> List[CandidateResult]:
         s = len(self.space.skus)
@@ -402,35 +453,14 @@ class ChunkedEvaluator:
         for lo in range(0, len(candidates), k):
             chunk = candidates[lo:lo + k]
             t0 = time.perf_counter()
-            batch = self.pack_chunk(chunk)
-            dev = [self.engine.total(batch, flow=self.flow)]
-            if mc_key is not None:
-                draws = mc_totals(batch, mc_key, n_draws=mc_draws,
-                                  flow=self.flow, sigmas=mc_sigmas)
-                # fold the real (unpadded) rows into per-candidate
-                # portfolio costs: (draws, len(chunk))
-                dev.append(portfolio_draws(draws[:, :len(chunk) * s],
-                                           qty, s))
-            # every device->host transfer of the chunk in one batched get
-            host = jax.device_get(tuple(dev))
+            total, re_tot, nre_tot, pf_draws = self._legacy_chunk_host(
+                chunk, mc_key, mc_draws, mc_sigmas)
             self.elapsed_s += time.perf_counter() - t0
-            tc = host[0]
-            pf_draws = np.asarray(host[1], np.float64) \
-                if mc_key is not None else None
-            total = np.asarray(tc.total, np.float64)
-            re_tot = np.asarray(tc.re.total, np.float64)
-            nre_tot = np.asarray(tc.nre.total, np.float64)
             for j, cand in enumerate(chunk):
                 rows = slice(j * s, (j + 1) * s)
                 unit = total[rows]
-                risk = None
-                if pf_draws is not None:
-                    pf = pf_draws[:, j]
-                    risk = {"mean": float(pf.mean()),
-                            "std": float(pf.std())}
-                    for q in mc_quantiles:
-                        risk[f"q{int(round(q * 100))}"] = \
-                            float(np.quantile(pf, q))
+                risk = self._legacy_risk(pf_draws[:, j], mc_quantiles) \
+                    if pf_draws is not None else None
                 out.append(CandidateResult(
                     candidate=cand, label=cand.label(), sku_names=names,
                     sku_unit_total=unit, sku_unit_re=re_tot[rows],
@@ -440,6 +470,70 @@ class ChunkedEvaluator:
             self.n_systems += len(chunk) * s
             self.n_chunks += 1
         return out
+
+    def evaluate_indices_legacy(self, idx, mc_key=None, mc_draws: int = 128,
+                                mc_sigmas=None,
+                                mc_quantiles: Sequence[float] = (0.5, 0.9),
+                                ) -> EvalArrays:
+        """Index-native pricing through the **legacy host-packing path**.
+
+        Same signature and :class:`EvalArrays` contract as
+        :meth:`evaluate_indices`, but every chunk goes host ``System``
+        packing -> engine -> host, no fused decode.  This is the
+        degraded-mode evaluator the pricing service falls back to when
+        fused dispatch fails: slow (per-candidate Python packing) but
+        correct, with results equal to float32 casts of the legacy
+        oracle's float64 values by construction (shared
+        :meth:`_legacy_chunk_host` / :meth:`_legacy_risk`).  Works with
+        ``fused=False`` evaluators too — no encoder needed.
+        """
+        idx = np.asarray(idx, np.int64)
+        if idx.ndim != 1 or idx.size == 0:
+            raise ValueError("need a 1-D, non-empty index vector")
+        if idx.min() < 0 or idx.max() >= self.space.size():
+            raise IndexError("candidate index out of range")
+        s = len(self.space.skus)
+        qty = np.asarray([sk.quantity for sk in self.space.skus], np.float64)
+        quantiles = tuple(float(q) for q in mc_quantiles)
+        n, k = idx.size, self.shape.candidates
+        unit = np.empty((n, s), np.float32)
+        re_a = np.empty((n, s), np.float32)
+        nre_a = np.empty((n, s), np.float32)
+        pf = np.empty((n,), np.float32)
+        risk = None
+        if mc_key is not None:
+            risk = {kk: np.empty((n,), np.float32)
+                    for kk in ("mean", "std")
+                    + tuple(f"q{int(round(q * 100))}" for q in quantiles)}
+        t0 = time.perf_counter()
+        for lo in range(0, n, k):
+            with _TRACER.span("legacy_chunk", lo=lo):
+                chunk = [self.space.candidate_at(int(i))
+                         for i in idx[lo:lo + k]]
+                total, re_tot, nre_tot, pf_draws = self._legacy_chunk_host(
+                    chunk, mc_key, mc_draws, mc_sigmas)
+                for j in range(len(chunk)):
+                    rows = slice(j * s, (j + 1) * s)
+                    u = total[rows]
+                    unit[lo + j] = u
+                    re_a[lo + j] = re_tot[rows]
+                    nre_a[lo + j] = nre_tot[rows]
+                    pf[lo + j] = float((qty * u).sum())
+                    if pf_draws is not None:
+                        for kk, v in self._legacy_risk(
+                                pf_draws[:, j], quantiles).items():
+                            risk[kk][lo + j] = v
+        self.elapsed_s += time.perf_counter() - t0
+        self.n_candidates += n
+        self.n_systems += n * s
+        self.n_chunks += -(-n // k)
+        finite = np.isfinite(unit).all(-1) & np.isfinite(pf)
+        if risk is not None:
+            for v in risk.values():
+                finite &= np.isfinite(v)
+        return EvalArrays(idx=idx, sku_unit_total=unit, sku_unit_re=re_a,
+                          sku_unit_nre=nre_a, portfolio_cost=pf, risk=risk,
+                          finite=finite)
 
 
 def evaluate_direct(space: DesignSpace, cand: Candidate,

@@ -1,0 +1,36 @@
+"""repro.resilience — failure handling for the pricing stack.
+
+Four small, dependency-light building blocks (stdlib + numpy only, no
+jax, no imports from the rest of ``repro`` — every other layer may
+import this one without cycles):
+
+* :mod:`~repro.resilience.faults` — deterministic, seed-keyed fault
+  injection behind the ``REPRO_FAULTS`` env var (disabled injectors are
+  falsy, so production hot paths pay one truthiness check).
+* :mod:`~repro.resilience.retry` — retry-with-backoff and a
+  closed/open/half-open :class:`CircuitBreaker` for the fused-dispatch
+  degradation path.
+* :mod:`~repro.resilience.guards` — host-side numerical validation:
+  non-finite walks over request objects and range checks over packed
+  system arrays (NaN/Inf anywhere, negative areas/costs, yields outside
+  (0, 1]).
+* :mod:`~repro.resilience.watchdog` — a heartbeat thread that detects a
+  stuck service tick and fires a one-per-stall callback (the server uses
+  it to auto-dump the flight recorder).
+
+How the service composes them is documented in the README "Failure
+handling" section and :mod:`repro.service.server`.
+"""
+from .faults import (FAULT_KINDS, FaultInjector, FaultRule, InjectedFault,
+                     parse_fault_spec)
+from .guards import nonfinite_paths, validate_packed_arrays
+from .retry import CircuitBreaker, RetryPolicy, call_with_retry
+from .watchdog import Watchdog
+
+__all__ = [
+    "FAULT_KINDS", "FaultInjector", "FaultRule", "InjectedFault",
+    "parse_fault_spec",
+    "nonfinite_paths", "validate_packed_arrays",
+    "CircuitBreaker", "RetryPolicy", "call_with_retry",
+    "Watchdog",
+]

@@ -9,27 +9,31 @@ call.  See :mod:`repro.service.server` for the tick loop.
 """
 from .cache import LaneSignature, ResultCache, TraceCache, \
     index_digest, space_fingerprint
-from .metrics import RequestRecord, ServiceMetrics
-from .protocol import ErrorInfo, INTERNAL_ERROR, INVALID_REQUEST, \
-    McSpec, MCRiskRequest, PriceRequest, PriceSystemsRequest, QUEUE_FULL, \
+from .metrics import RequestRecord, ResilienceStats, ServiceMetrics
+from .protocol import DEADLINE_EXCEEDED, ErrorInfo, INTERNAL_ERROR, \
+    INVALID_REQUEST, \
+    McSpec, MCRiskRequest, NUMERICAL_ERROR, PriceRequest, \
+    PriceSystemsRequest, QUEUE_FULL, \
     RankRequest, RankResult, Request, RequestLog, Response, SearchRequest, \
-    SystemsResult, Timing, WhatIfRequest, WhatIfResult, error_response
+    SystemsResult, Timing, WhatIfRequest, WhatIfResult, error_response, \
+    validate_request
 from .scheduler import Assignment, GenWork, GroupWork, Lane, Scheduler, \
     SpanWork, TickPlan
 from .server import PricingService, SearchTask, SearchWarmup, \
     ServiceConfig, ServiceError, serve
 
 __all__ = [
-    "ErrorInfo", "INTERNAL_ERROR", "INVALID_REQUEST", "QUEUE_FULL",
+    "DEADLINE_EXCEEDED", "ErrorInfo", "INTERNAL_ERROR", "INVALID_REQUEST",
+    "NUMERICAL_ERROR", "QUEUE_FULL",
     "McSpec", "MCRiskRequest", "PriceRequest", "PriceSystemsRequest",
     "RankRequest", "RankResult", "Request", "RequestLog", "Response",
     "SearchRequest", "SystemsResult", "Timing", "WhatIfRequest",
-    "WhatIfResult", "error_response",
+    "WhatIfResult", "error_response", "validate_request",
     "Lane", "Scheduler", "SpanWork", "GroupWork", "GenWork", "Assignment",
     "TickPlan",
     "LaneSignature", "ResultCache", "TraceCache", "index_digest",
     "space_fingerprint",
-    "RequestRecord", "ServiceMetrics",
+    "RequestRecord", "ResilienceStats", "ServiceMetrics",
     "PricingService", "SearchTask", "SearchWarmup", "ServiceConfig",
     "ServiceError", "serve",
 ]

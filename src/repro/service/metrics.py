@@ -84,6 +84,56 @@ class LaneStats:
                                       if self.slots_total else 0.0)}
 
 
+# Every resilience counter the service tracks, with its registry help
+# string.  One flat namespace: the snapshot block and the Prometheus
+# mirror (service_<name>) stay in lockstep by construction.
+_RESILIENCE_COUNTERS = {
+    "retries": "fused dispatch retry attempts",
+    "fused_failures": "fused dispatch attempts that raised",
+    "fallback_ticks": "ticks priced via the legacy host-packing fallback",
+    "fallback_rows": "rows priced in degraded (fallback) mode",
+    "fallback_busy_s": "wall seconds inside fallback pricing",
+    "breaker_opens": "circuit breaker closed/half_open -> open transitions",
+    "breaker_closes": "circuit breaker -> closed transitions",
+    "breaker_probes": "circuit breaker half-open probe admissions",
+    "deadline_rejected": "requests failed with deadline_exceeded",
+    "numerical_errors": "requests failed with numerical_error",
+    "cancelled": "requests cancelled by the client before completion",
+    "watchdog_trips": "stuck-tick watchdog trips",
+    "watchdog_dumps": "flight-recorder dumps triggered by the watchdog",
+    "loop_errors": "exceptions that escaped a tick into the loop guard",
+    "loop_restarts": "tick-loop tasks relaunched after dying",
+    "faults_injected": "REPRO_FAULTS faults actually fired",
+}
+
+
+class ResilienceStats:
+    """Failure-handling counters owned by one :class:`PricingService`.
+
+    ``bump(name)`` increments the local field and mirrors it into the
+    stack-wide registry as ``service_<name>`` — the satellite obs
+    contract: ``svc.snapshot()["resilience"]`` and a Prometheus scrape
+    always agree.
+    """
+
+    def __init__(self):
+        self.reset()
+
+    def reset(self):
+        for name in _RESILIENCE_COUNTERS:
+            setattr(self, name, 0.0 if name.endswith("_s") else 0)
+
+    def bump(self, name: str, n=1):
+        if name not in _RESILIENCE_COUNTERS:
+            raise KeyError(f"unknown resilience counter {name!r}")
+        setattr(self, name, getattr(self, name) + n)
+        REGISTRY.counter(f"service_{name}",
+                         help=_RESILIENCE_COUNTERS[name]).inc(n)
+
+    def snapshot(self) -> Dict:
+        return {name: getattr(self, name) for name in _RESILIENCE_COUNTERS}
+
+
 class ServiceMetrics:
     """Mutable counters owned by one :class:`PricingService`."""
 

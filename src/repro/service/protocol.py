@@ -38,11 +38,14 @@ from ..dse.evaluate import CandidateResult, EvalArrays
 from ..dse.search import RiskConfig, SearchResult
 from ..dse.space import Candidate
 from ..dse.uncertainty import Uncertainty
+from ..resilience.guards import nonfinite_paths
 
 # Typed error codes (the closed set clients may dispatch on).
 QUEUE_FULL = "queue_full"            # backpressure: bounded queue rejected
 INVALID_REQUEST = "invalid_request"  # failed validation at admission
 INTERNAL_ERROR = "internal"          # tick-time failure, isolated per request
+DEADLINE_EXCEEDED = "deadline_exceeded"  # deadline_ms elapsed before done
+NUMERICAL_ERROR = "numerical_error"  # non-finite cost in this request's rows
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,6 +89,7 @@ class PriceRequest:
     candidates: Tuple[Candidate, ...] = ()
     flow: str = "chip-last"
     mc: Optional[McSpec] = None      # attach risk stats to every row
+    deadline_ms: Optional[float] = None  # wall budget; see validate_request
 
     kind = "price"
 
@@ -100,6 +104,7 @@ class RankRequest:
     flow: str = "chip-last"
     mc: Optional[McSpec] = None      # rank on a risk stat instead of cost
     objective: str = "cost"          # "cost" or a risk key (e.g. "q90")
+    deadline_ms: Optional[float] = None
 
     kind = "rank"
 
@@ -112,6 +117,7 @@ class MCRiskRequest:
     indices: Sequence[int] = ()
     mc: McSpec = dataclasses.field(default_factory=McSpec)
     flow: str = "chip-last"
+    deadline_ms: Optional[float] = None
 
     kind = "mc_risk"
 
@@ -128,6 +134,7 @@ class WhatIfRequest:
     processes: Tuple[str, ...] = ()
     integrations: Tuple[str, ...] = ()
     flow: str = "chip-last"
+    deadline_ms: Optional[float] = None
 
     kind = "what_if"
 
@@ -145,6 +152,7 @@ class SearchRequest:
     jump_prob: float = 0.15
     risk: Optional[RiskConfig] = None
     flow: str = "chip-last"
+    deadline_ms: Optional[float] = None  # checked between generations too
 
     kind = "search"
 
@@ -158,6 +166,7 @@ class PriceSystemsRequest:
 
     specs: Tuple[Dict[str, Any], ...] = ()
     flow: str = "chip-last"
+    deadline_ms: Optional[float] = None
 
     kind = "price_systems"
 
@@ -210,10 +219,36 @@ class Response:
     error: Optional[ErrorInfo] = None
     timing: Optional[Timing] = None
     cached: bool = False               # served from the result cache
+    # Degraded-mode provenance: True when any row of this response was
+    # priced through the legacy host-packing fallback instead of the
+    # fused path.  For row-sweep kinds ("price"/"mc_risk"),
+    # degraded_rows is the (K,) bool per-row mask; degraded values are
+    # float32 casts of the legacy oracle's float64s (slow-but-correct).
+    degraded: bool = False
+    degraded_rows: Optional[np.ndarray] = None
 
     @property
     def latency_s(self) -> float:
         return self.timing.done_s if self.timing else 0.0
+
+
+def validate_request(req: Request) -> Optional[str]:
+    """Admission-time numerical validation; returns a problem string (the
+    caller owes an ``invalid_request`` envelope) or None.
+
+    Walks every numeric field of the request — including nested specs,
+    McSpec sigmas, and candidate objects — and rejects NaN/Inf before
+    they can reach a fused kernel and contaminate coalesced siblings.
+    Also rejects non-positive ``deadline_ms`` (a deadline that can never
+    be met is a client bug, not a ``deadline_exceeded`` outcome).
+    """
+    problems = nonfinite_paths(req, path=getattr(req, "kind", "request"))
+    if problems:
+        return "non-finite numeric field(s): " + "; ".join(problems)
+    deadline = getattr(req, "deadline_ms", None)
+    if deadline is not None and deadline <= 0:
+        return f"deadline_ms must be positive, got {deadline}"
+    return None
 
 
 def error_response(request_id: int, kind: str, code: str, message: str,

@@ -54,6 +54,7 @@ class SpanWork:                          # membership must not compare arrays
     lane: Lane
     idx: np.ndarray                # (n,) candidate indices, request order
     cursor: int = 0                # next unscheduled position
+    deadline_t: Optional[float] = None   # absolute perf_counter deadline
 
     @property
     def remaining(self) -> int:
@@ -67,6 +68,7 @@ class GroupWork:
     owner: Any
     lane: Lane
     systems: List[Any]             # core.system.System objects
+    deadline_t: Optional[float] = None
 
     @property
     def n_systems(self) -> int:
@@ -81,6 +83,7 @@ class GenWork:
     owner: Any
     lane: Lane
     task: Any                      # server.SearchTask
+    deadline_t: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -143,6 +146,18 @@ class Scheduler:
     def drop_owned_by(self, owner: Any):
         """Remove all queued work of a (failed) request."""
         self.queue = deque(w for w in self.queue if w.owner is not owner)
+
+    def expire(self, now: float) -> List[Any]:
+        """Pop and return every queued item whose deadline has passed
+        (the caller owes each owner a ``deadline_exceeded`` envelope).
+        Policy only: the row budget stays charged until the server fails
+        the owner and releases it."""
+        expired = [w for w in self.queue
+                   if w.deadline_t is not None and w.deadline_t <= now]
+        if expired:
+            dead = {id(w) for w in expired}
+            self.queue = deque(w for w in self.queue if id(w) not in dead)
+        return expired
 
     # -- tick planning -------------------------------------------------------
     def plan(self) -> Optional[TickPlan]:

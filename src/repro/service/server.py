@@ -50,12 +50,16 @@ from ..dse.space import ArchChoice, Candidate, DesignSpace
 from ..obs import jaxhooks
 from ..obs.flight import FlightRecorder
 from ..obs.trace import TRACER as _TRACER
+from ..resilience import CircuitBreaker, FaultInjector, InjectedFault, \
+    Watchdog
 from .cache import LaneSignature, ResultCache, TraceCache, space_fingerprint
-from .metrics import RequestRecord, ServiceMetrics
-from .protocol import INTERNAL_ERROR, INVALID_REQUEST, QUEUE_FULL, McSpec, \
+from .metrics import RequestRecord, ResilienceStats, ServiceMetrics
+from .protocol import DEADLINE_EXCEEDED, INTERNAL_ERROR, INVALID_REQUEST, \
+    NUMERICAL_ERROR, QUEUE_FULL, McSpec, \
     MCRiskRequest, PriceRequest, PriceSystemsRequest, RankRequest, Request, \
     RequestLog, Response, SearchRequest, SystemsResult, Timing, \
-    WhatIfRequest, WhatIfResult, RankResult, error_response
+    WhatIfRequest, WhatIfResult, RankResult, error_response, \
+    validate_request
 from .scheduler import Assignment, GenWork, GroupWork, Lane, Scheduler, \
     SpanWork, TickPlan
 
@@ -97,6 +101,13 @@ class ServiceConfig:
     warm_search: Tuple[SearchWarmup, ...] = ()
     log_keep: int = 1024
     flight_capacity: int = 2048        # flight-recorder ring (always on)
+    # -- failure handling (see README "Failure handling") ------------------
+    tick_retries: int = 1              # fused re-dispatch attempts per tick
+    retry_backoff_s: float = 0.005     # linear backoff between attempts
+    fallback: bool = True              # degrade to the legacy host path
+    breaker_threshold: int = 1         # consecutive failures that open it
+    breaker_cooldown_s: float = 2.0    # open -> half_open re-probe delay
+    watchdog_timeout_s: Optional[float] = None   # None = no watchdog
 
 
 @dataclasses.dataclass(eq=False)
@@ -119,6 +130,9 @@ class _Active:
     on_partial: Optional[Callable] = None
     task: Optional["SearchTask"] = None
     failed: bool = False
+    deadline_t: Optional[float] = None       # absolute perf_counter deadline
+    degraded: bool = False                   # any row via legacy fallback
+    degraded_rows: Optional[np.ndarray] = None   # (n,) provenance mask
 
 
 def _risk_keys(quantiles: Tuple[float, ...]) -> Tuple[str, ...]:
@@ -243,6 +257,96 @@ class PricingService:
         self._wake: Optional[asyncio.Event] = None
         self._running = False
         self.warmed = False
+        # -- failure handling (repro.resilience) ------------------------
+        self.faults = FaultInjector.from_env()
+        self.res = ResilienceStats()
+        self.breaker = CircuitBreaker(
+            threshold=self.cfg.breaker_threshold,
+            cooldown_s=self.cfg.breaker_cooldown_s,
+            on_event=self._on_breaker_event)
+        self.watchdog = (Watchdog(self.cfg.watchdog_timeout_s,
+                                  self._on_stall)
+                         if self.cfg.watchdog_timeout_s else None)
+        self._deadline_count = 0       # admitted requests with deadlines
+        self._fb_evs: Dict[str, ChunkedEvaluator] = {}   # per-flow legacy
+
+    # ------------------------------------------------------------------
+    # Failure handling (repro.resilience glue)
+    # ------------------------------------------------------------------
+
+    def _fire(self, kind: str):
+        """Check the fault injector at one call site.  Costs a single
+        truthiness check when ``REPRO_FAULTS`` is unset."""
+        if not self.faults:
+            return None
+        rule = self.faults.fire(kind)
+        if rule is not None:
+            self.res.bump("faults_injected")
+            self.flight.record("fault", kind=kind)
+        return rule
+
+    def _on_breaker_event(self, event: str):
+        self.res.bump(f"breaker_{event}s")
+        self.log.event(-1, f"breaker_{event}")
+        self.flight.record("breaker", transition=event,
+                           state=self.breaker.state)
+
+    def _on_stall(self, elapsed: float):
+        """Watchdog callback — runs on the watchdog thread, so: evidence
+        only (counter bumps are GIL-atomic, the flight ring is append-
+        only).  The stuck tick itself cannot be preempted; recovery is
+        the loop guard in :meth:`_run` plus :meth:`_ensure_loop`."""
+        self.res.bump("watchdog_trips")
+        self.flight.record("watchdog_trip", busy_s=elapsed)
+        path = None
+        if FlightRecorder.auto_dump_dir() is not None:
+            try:
+                path = self.dump_flight_recorder()
+                self.res.bump("watchdog_dumps")
+            except OSError:
+                path = None
+        self.log.event(-1, "watchdog_trip", busy_s=elapsed,
+                       dump=str(path) if path else None)
+
+    def _ensure_loop(self):
+        """Relaunch the tick-loop task if it died (it should not — the
+        loop guard contains per-tick exceptions — but a dead loop must
+        never strand admitted work)."""
+        if self._running and self._task is not None and self._task.done():
+            self.res.bump("loop_restarts")
+            self.log.event(-1, "loop_restart")
+            self.flight.record("loop_restart")
+            self._task = asyncio.get_running_loop().create_task(self._run())
+
+    def _cancel(self, req: _Active):
+        """Client abandoned an admitted request (awaiter cancelled):
+        drop its queued work, release its row budget, count it.  No
+        envelope — there is nobody left to receive one."""
+        if req.failed or req.uid not in self._active:
+            return
+        req.failed = True
+        if req.deadline_t is not None:
+            self._deadline_count -= 1
+        self.sched.drop_owned_by(req)
+        self.sched.release(req.cost)
+        self.metrics.finish_request(req.rec, ok=False)
+        self._active.pop(req.uid, None)
+        self.res.bump("cancelled")
+        self.log.event(req.uid, "cancelled")
+        self.flight.record("request_cancelled", uid=req.uid, kind=req.kind)
+
+    def _fallback_evaluator(self, flow: str) -> ChunkedEvaluator:
+        """The legacy host-packing evaluator degraded ticks price
+        through (the parity oracle: float32 casts of its float64s)."""
+        if flow == self.ev.flow:
+            return self.ev
+        ev = self._fb_evs.get(flow)
+        if ev is None:
+            ev = ChunkedEvaluator(self.space,
+                                  candidates_per_chunk=self.cfg.chunk,
+                                  flow=flow, fused=False)
+            self._fb_evs[flow] = ev
+        return ev
 
     # ------------------------------------------------------------------
     # Warmup: compile every configured lane signature before serving
@@ -266,6 +370,15 @@ class PricingService:
         dev0 = jnp.zeros((self.cfg.chunk,), jnp.int32)
         self.traces.ensure(sig, lambda: jax.device_get(_CHUNK_JIT(
             self.enc.tables, dev0, self.qty, meta=self.enc.meta, flow=flow)))
+        if self.cfg.fallback:
+            # warm the degraded path's engine trace too, so a tick that
+            # falls back never compiles mid-tick (the fallback always
+            # prices a full, padded chunk — one constant signature).
+            idx0 = np.zeros((self.cfg.chunk,), np.int64)
+            self.traces.ensure(
+                LaneSignature("fallback", flow),
+                lambda: self._fallback_evaluator(flow)
+                .evaluate_indices_legacy(idx0))
 
     def _ensure_mc(self, flow: str, draws: int, quantiles: Tuple[float, ...]):
         sig = LaneSignature("mc", flow, (draws, quantiles))
@@ -275,6 +388,16 @@ class PricingService:
         self.traces.ensure(sig, lambda: jax.device_get(_CHUNK_MC_JIT(
             self.enc.tables, dev0, self.qty, key0, sig0, meta=self.enc.meta,
             flow=flow, n_draws=draws, quantiles=quantiles)))
+        if self.cfg.fallback:
+            # sigmas are traced (not signature components) — warming
+            # with the defaults covers every sigma set at this shape.
+            idx0 = np.zeros((self.cfg.chunk,), np.int64)
+            self.traces.ensure(
+                LaneSignature("fallback_mc", flow, (draws, quantiles)),
+                lambda: self._fallback_evaluator(flow)
+                .evaluate_indices_legacy(idx0, mc_key=jax.random.PRNGKey(0),
+                                         mc_draws=draws,
+                                         mc_quantiles=quantiles))
 
     def _ensure_gen(self, flow: str, w: SearchWarmup):
         sig = LaneSignature("gen", flow, (w.population, w.elite,
@@ -315,6 +438,8 @@ class PricingService:
             return
         if not self.warmed:
             self.warmup()
+        if self.watchdog is not None:
+            self.watchdog.start()
         self._wake = asyncio.Event()
         self._running = True
         self._task = asyncio.get_running_loop().create_task(self._run())
@@ -327,6 +452,8 @@ class PricingService:
         if self._task is not None:
             await self._task
             self._task = None
+        if self.watchdog is not None:
+            self.watchdog.stop()
 
     async def _run(self):
         while True:
@@ -337,7 +464,17 @@ class PricingService:
                 if not self.sched.has_work():        # re-check after clear
                     await self._wake.wait()
                 continue
-            self._tick()
+            try:
+                self._tick()
+            except Exception as e:  # noqa: BLE001 - the loop must survive
+                # _tick already fails the tick's owners per request; an
+                # exception reaching here is a bug in the failure path
+                # itself.  Contain it: count, record, keep serving.
+                self.res.bump("loop_errors")
+                self.log.event(-1, "loop_error",
+                               error=f"{type(e).__name__}: {e}")
+                self.flight.record("loop_error",
+                                   error=f"{type(e).__name__}: {e}")
             await asyncio.sleep(0)   # let clients submit between ticks
 
     # ------------------------------------------------------------------
@@ -355,6 +492,7 @@ class PricingService:
         uid = self._uid
         t_submit = time.perf_counter()
         self.log.event(uid, "submit", kind=request.kind)
+        self._ensure_loop()
         try:
             active, items, cached = self._lower(uid, request, t_submit,
                                                 on_partial)
@@ -372,20 +510,31 @@ class PricingService:
                             result=cached, cached=True,
                             timing=Timing(t_submit, now - t_submit,
                                           now - t_submit))
-        if not self.sched.admit(items, active.cost):
+        flood = self._fire("flood")
+        if flood is not None or not self.sched.admit(items, active.cost):
             self.metrics.reject()
             self.metrics.finish_request(active.rec, ok=False)
             self.log.event(uid, "rejected", code=QUEUE_FULL)
             return error_response(
                 uid, request.kind, QUEUE_FULL,
+                "pending row budget exhausted (injected flood)"
+                if flood is not None else
                 f"pending row budget exhausted "
                 f"({self.sched.pending_rows}/{self.sched.max_pending} used, "
                 f"request needs {active.cost})", t_submit)
+        for it in items:
+            it.deadline_t = active.deadline_t
         self._active[uid] = active
+        if active.deadline_t is not None:
+            self._deadline_count += 1
         self.log.event(uid, "admitted", rows=active.n_rows)
         if self._wake is not None:
             self._wake.set()
-        return await active.future
+        try:
+            return await active.future
+        except asyncio.CancelledError:
+            self._cancel(active)
+            raise
 
     # ------------------------------------------------------------------
     # Lowering: request -> lane + work items + finalizers
@@ -399,8 +548,10 @@ class PricingService:
         sig_t = (mc.sigmas.defect_sigma, mc.sigmas.wafer_cost_sigma,
                  mc.sigmas.bond_sigma, mc.sigmas.interposer_sigma)
         lane = Lane(kind="mc", flow=flow, mc=(draws, quantiles, key_t, sig_t))
+        # (key, sigma array, draws, quantiles) feed the fused dispatch;
+        # the trailing Uncertainty object is for the legacy fallback.
         self._lane_args.setdefault(
-            lane, (key, mc.sigmas.as_array(), draws, quantiles))
+            lane, (key, mc.sigmas.as_array(), draws, quantiles, mc.sigmas))
         return lane
 
     def _check_flow(self, flow: str):
@@ -439,6 +590,7 @@ class PricingService:
                         "re": np.empty((n, s), np.float32),
                         "nre": np.empty((n, s), np.float32),
                         "pf": np.empty((n,), np.float32)}
+        active.degraded_rows = np.zeros((n,), bool)
         if quantiles is not None:
             active.risk_keys = _risk_keys(quantiles)
             for k in active.risk_keys:
@@ -460,11 +612,17 @@ class PricingService:
         if kind is None:
             raise ServiceError(INVALID_REQUEST,
                                f"unknown request type {type(request)!r}")
+        problem = validate_request(request)
+        if problem is not None:
+            raise ServiceError(INVALID_REQUEST, problem)
         self._check_flow(request.flow)
         fut = asyncio.get_running_loop().create_future()
         active = _Active(uid=uid, kind=kind, request=request,
                          rec=self.metrics.start_request(kind, 0, t_submit),
                          future=fut, on_partial=on_partial)
+        deadline_ms = getattr(request, "deadline_ms", None)
+        if deadline_ms is not None:
+            active.deadline_t = t_submit + float(deadline_ms) / 1e3
 
         if kind == "search":
             return self._lower_search(active, request)
@@ -649,7 +807,8 @@ class PricingService:
         self._alloc_sweep(active, uniq, quantiles)
         active.cost = sr.population * (sr.generations + 1)  # unchanged
         active.payload_fn = task.finalize
-        self.sched.push(SpanWork(owner=active, lane=lane, idx=uniq))
+        self.sched.push(SpanWork(owner=active, lane=lane, idx=uniq,
+                                 deadline_t=active.deadline_t))
 
     # -- raw spec lane ------------------------------------------------------
     def _lower_systems(self, active: _Active, req: PriceSystemsRequest):
@@ -702,22 +861,42 @@ class PricingService:
     # ------------------------------------------------------------------
 
     def _tick(self) -> bool:
+        if self._deadline_count:
+            now = time.perf_counter()
+            for w in self.sched.expire(now):
+                owner: _Active = w.owner
+                if owner.failed:
+                    continue
+                self.res.bump("deadline_rejected")
+                self._fail(owner, DEADLINE_EXCEEDED,
+                           f"deadline exceeded after "
+                           f"{(now - owner.rec.t_submit) * 1e3:.1f} ms "
+                           f"({owner.rows_done}/{owner.n_rows} rows done)")
         plan = self.sched.plan()
         if plan is None:
             return False
         t0 = time.perf_counter()
         before = self.traces.counts()
-        with _TRACER.span("tick", lane=plan.lane.kind):
-            try:
-                if plan.gen is not None:
-                    rows = self._tick_gen(plan)
-                elif plan.lane.kind == "raw":
-                    rows = self._tick_raw(plan)
-                else:
-                    rows = self._tick_chunk(plan)
-            except Exception as e:  # fail the tick's owners, keep serving
-                self._fail_tick(plan, e)
-                rows = 0
+        if self.watchdog is not None:
+            self.watchdog.enter()
+        try:
+            with _TRACER.span("tick", lane=plan.lane.kind):
+                stall = self._fire("stall")
+                if stall is not None:
+                    time.sleep(stall.ms / 1e3)
+                try:
+                    if plan.gen is not None:
+                        rows = self._tick_gen(plan)
+                    elif plan.lane.kind == "raw":
+                        rows = self._tick_raw(plan)
+                    else:
+                        rows = self._tick_chunk(plan)
+                except Exception as e:  # fail the owners, keep serving
+                    self._fail_tick(plan, e)
+                    rows = 0
+        finally:
+            if self.watchdog is not None:
+                self.watchdog.exit()
         recompiled = self.traces.meter_tick(before)
         wall = time.perf_counter() - t0
         # gen lanes price their whole population every tick: count those
@@ -759,6 +938,72 @@ class PricingService:
             self._fail(owner, INTERNAL_ERROR,
                        f"{type(err).__name__}: {err}")
 
+    def _dispatch_fused(self, lane: Lane, dev):
+        """One fused-kernel dispatch + host fetch (may raise)."""
+        mc = lane.kind == "mc"
+        if self.faults:
+            if self._fire("recompile") is not None:
+                # drop the fused jit's compiled traces: the dispatch
+                # below survives, recompiles, and gets metered.
+                fn = (_CHUNK_MC_JIT if mc else _CHUNK_JIT).fn
+                clear = getattr(fn, "clear_cache", None)
+                if clear is not None:
+                    clear()
+            if self._fire("dispatch_error") is not None:
+                raise InjectedFault("dispatch_error")
+        if mc:
+            key, sig, draws, quantiles = self._lane_args[lane][:4]
+            out = _CHUNK_MC_JIT(self.enc.tables, dev, self.qty, key, sig,
+                                meta=self.enc.meta, flow=lane.flow,
+                                n_draws=draws, quantiles=quantiles)
+        else:
+            out = _CHUNK_JIT(self.enc.tables, dev, self.qty,
+                             meta=self.enc.meta, flow=lane.flow)
+        return jax.device_get(out)                 # THE tick sync
+
+    def _dispatch_fused_with_retry(self, lane: Lane, dev):
+        """Returns ``(host, None)`` or, with the retry budget spent,
+        ``(None, last_error)`` — the caller decides fallback vs raise."""
+        last: Optional[Exception] = None
+        for attempt in range(1 + max(0, self.cfg.tick_retries)):
+            if attempt:
+                self.res.bump("retries")
+                time.sleep(self.cfg.retry_backoff_s * attempt)
+            try:
+                return self._dispatch_fused(lane, dev), None
+            except Exception as e:  # noqa: BLE001 - retry any failure
+                self.res.bump("fused_failures")
+                last = e
+                self.log.event(-1, "fused_dispatch_error", lane=lane.kind,
+                               attempt=attempt,
+                               error=f"{type(e).__name__}: {e}")
+                self.flight.record("fused_dispatch_error", lane=lane.kind,
+                                   attempt=attempt,
+                                   error=f"{type(e).__name__}: {e}")
+        return None, last
+
+    def _fallback_chunk_host(self, lane: Lane, chunk_idx: np.ndarray):
+        """Degraded-mode tick: price the (already padded) chunk through
+        the legacy host-packing oracle.  Returns host arrays in the
+        fused layout ``(unit, re, nre, pf[, risk], finite)`` — float32
+        casts of the oracle's float64s, bit-exact vs ``_evaluate_legacy``
+        by shared :meth:`ChunkedEvaluator._legacy_chunk_host` math."""
+        ev = self._fallback_evaluator(lane.flow)
+        with _TRACER.span("fallback", lane=lane.kind):
+            if lane.kind == "mc":
+                key, _, draws, quantiles, sigmas = self._lane_args[lane]
+                arrays = ev.evaluate_indices_legacy(
+                    chunk_idx, mc_key=key, mc_draws=draws,
+                    mc_sigmas=sigmas, mc_quantiles=quantiles)
+            else:
+                arrays = ev.evaluate_indices_legacy(chunk_idx)
+        out = [arrays.sku_unit_total, arrays.sku_unit_re,
+               arrays.sku_unit_nre, arrays.portfolio_cost]
+        if arrays.risk is not None:
+            out.append(arrays.risk)
+        out.append(arrays.finite)
+        return tuple(out)
+
     def _tick_chunk(self, plan: TickPlan) -> int:
         k = self.cfg.chunk
         with _TRACER.span("pack", used=plan.used):
@@ -769,24 +1014,53 @@ class PricingService:
             if plan.used < k and plan.assignments:
                 chunk_idx[plan.used:] = chunk_idx[0]  # cost-neutral padding
             dev = jnp.asarray(chunk_idx, jnp.int32)
-        if plan.lane.kind == "mc":
-            key, sig, draws, quantiles = self._lane_args[plan.lane]
-            out = _CHUNK_MC_JIT(self.enc.tables, dev, self.qty, key, sig,
-                                meta=self.enc.meta, flow=plan.lane.flow,
-                                n_draws=draws, quantiles=quantiles)
-        else:
-            out = _CHUNK_JIT(self.enc.tables, dev, self.qty,
-                             meta=self.enc.meta, flow=plan.lane.flow)
-        host = jax.device_get(out)                 # THE tick sync
+        host = None
+        degraded = False
+        if self.breaker.allow():
+            host, err = self._dispatch_fused_with_retry(plan.lane, dev)
+            if host is None:
+                self.breaker.record_failure()
+                if not self.cfg.fallback:
+                    raise err
+            else:
+                self.breaker.record_success()
+        if host is None:
+            # fused path down (or breaker open): slow-but-correct.
+            t_fb = time.perf_counter()
+            host = self._fallback_chunk_host(plan.lane, chunk_idx)
+            degraded = True
+            self.res.bump("fallback_ticks")
+            self.res.bump("fallback_rows", plan.used)
+            self.res.bump("fallback_busy_s", time.perf_counter() - t_fb)
         now = time.perf_counter()
         unit, re_t, nre_t, pf = host[0], host[1], host[2], host[3]
         risk = host[4] if plan.lane.kind == "mc" else None
+        finite = np.asarray(host[-1])
+        if self.faults and plan.used \
+                and self._fire("poison") is not None:
+            # host buffers from device_get may be read-only views
+            unit = np.array(unit)
+            finite = np.array(finite)
+            row = self.faults.rng(
+                "poison", self.faults.fired["poison"]).randrange(plan.used)
+            unit[row] = np.nan
+            finite[row] = False
         for a in plan.assignments:
             req: _Active = a.item.owner
             if req.failed:
                 continue
             sl = slice(a.slot, a.slot + a.n)
             dst = slice(a.start, a.start + a.n)
+            ok_rows = finite[sl]
+            if not ok_rows.all():
+                # a typed envelope for THIS request only; coalesced
+                # siblings in the same chunk are untouched.
+                bad = int(a.n - ok_rows.sum())
+                self.res.bump("numerical_errors")
+                self._fail(req, NUMERICAL_ERROR,
+                           f"non-finite cost in {bad} of {a.n} rows "
+                           f"(rows {a.start}..{a.start + a.n - 1})")
+                continue
             req.accum["unit"][dst] = unit[sl]
             req.accum["re"][dst] = re_t[sl]
             req.accum["nre"][dst] = nre_t[sl]
@@ -794,6 +1068,9 @@ class PricingService:
             if risk is not None:
                 for kk in req.risk_keys:
                     req.accum["risk:" + kk][dst] = risk[kk][sl]
+            if degraded:
+                req.degraded = True
+                req.degraded_rows[dst] = True
             if not req.rec.t_first:
                 req.rec.t_first = now
             req.rows_done += a.n
@@ -811,12 +1088,27 @@ class PricingService:
         if req.failed:
             return 0
         task = work.task
+        # checkpointed abort: a search checks its deadline between
+        # generations (queue expiry catches it too once re-pushed, but
+        # plan() may have popped this work before the deadline passed).
+        if req.deadline_t is not None \
+                and time.perf_counter() >= req.deadline_t:
+            self.res.bump("deadline_rejected")
+            self._fail(req, DEADLINE_EXCEEDED,
+                       f"deadline exceeded after {task.gen}/"
+                       f"{task.sr.generations} generations")
+            return 0
         with _TRACER.span("generation", gen=task.gen):
             try:
                 out = task.device_call()
                 host = jax.device_get(out)         # THE tick sync
             except Exception as e:
                 self._fail(req, INTERNAL_ERROR, f"{type(e).__name__}: {e}")
+                return 0
+            if not np.isfinite(np.asarray(host[2], np.float64)).all():
+                self.res.bump("numerical_errors")
+                self._fail(req, NUMERICAL_ERROR,
+                           f"non-finite objective in generation {task.gen}")
                 return 0
             if not req.rec.t_first:
                 req.rec.t_first = time.perf_counter()
@@ -865,6 +1157,15 @@ class PricingService:
             off += g.n_systems
             if req.failed:
                 continue
+            group_sl = slice(off - g.n_systems, off)
+            if not (np.isfinite(total[group_sl]).all()
+                    and np.isfinite(re_tot[group_sl]).all()
+                    and np.isfinite(nre_tot[group_sl]).all()):
+                self.res.bump("numerical_errors")
+                self._fail(req, NUMERICAL_ERROR,
+                           f"non-finite cost in the {g.n_systems}-system "
+                           f"group")
+                continue
             req.rec.t_first = req.rec.t_first or now
             req.rows_done = req.n_rows
             self._finish(req, SystemsResult(rows=rows))
@@ -879,7 +1180,9 @@ class PricingService:
     def _finish_sweep(self, req: _Active):
         try:
             arrays = self._sweep_arrays(req)
-            if req.cache_key is not None:
+            # degraded (fallback-priced) values are correct but carry a
+            # different provenance than fused ones — never cache them.
+            if req.cache_key is not None and not req.degraded:
                 self.results.put(req.cache_key, arrays)
             payload = req.payload_fn(arrays)
         except Exception as e:
@@ -888,22 +1191,33 @@ class PricingService:
         self._finish(req, payload)
 
     def _finish(self, req: _Active, payload):
+        if req.deadline_t is not None:
+            self._deadline_count -= 1
         self.metrics.finish_request(req.rec, ok=True)
         self.sched.release(req.cost)
         self._active.pop(req.uid, None)
-        self.log.event(req.uid, "done", rows=req.n_rows)
+        self.log.event(req.uid, "done", rows=req.n_rows,
+                       degraded=req.degraded)
         self.flight.record("request", uid=req.uid, kind=req.kind,
-                           rows=req.n_rows, wall_s=req.rec.latency_s)
+                           rows=req.n_rows, wall_s=req.rec.latency_s,
+                           degraded=req.degraded)
         if not req.future.done():
             req.future.set_result(Response(
                 request_id=req.uid, kind=req.kind, ok=True, result=payload,
                 timing=Timing(req.rec.t_submit, req.rec.ttfr_s,
-                              req.rec.latency_s)))
+                              req.rec.latency_s),
+                degraded=req.degraded,
+                degraded_rows=(req.degraded_rows
+                               if req.degraded
+                               and req.kind in ("price", "mc_risk")
+                               else None)))
 
     def _fail(self, req: _Active, code: str, message: str):
         if req.failed:
             return
         req.failed = True
+        if req.deadline_t is not None:
+            self._deadline_count -= 1
         self.sched.drop_owned_by(req)
         self.sched.release(req.cost)
         self.metrics.finish_request(req.rec, ok=False)
@@ -927,6 +1241,14 @@ class PricingService:
         attribution and ``device_get`` stats."""
         snap = self.metrics.snapshot(trace_stats=self.traces.stats(),
                                      cache_stats=self.results.stats())
+        snap["resilience"] = {
+            **self.res.snapshot(),
+            "breaker": self.breaker.snapshot(),
+            "faults": self.faults.stats(),
+            "deadlines_active": self._deadline_count,
+            "watchdog": (self.watchdog.snapshot()
+                         if self.watchdog is not None else None),
+        }
         if _TRACER.enabled():
             snap["obs"] = {
                 "phases": _TRACER.phase_table(),

@@ -1,0 +1,679 @@
+"""repro.resilience + the hardened service: deterministic fault
+injection, deadline/cancellation semantics, retry -> breaker -> legacy
+fallback (bit-exact vs the host-packing oracle), numerical guardrails
+(typed ``numerical_error`` envelopes that never contaminate coalesced
+siblings), watchdog evidence capture, backpressure recovery, and the
+bench-guard's non-traceback failure modes."""
+import asyncio
+import dataclasses
+import pathlib
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SystemBatch
+from repro.core.engine import finite_rows
+from repro.core.system import spec
+from repro.dse import ChunkedEvaluator, DesignSpace, SKU, Uncertainty
+from repro.resilience import (CircuitBreaker, FaultInjector, RetryPolicy,
+                              Watchdog, call_with_retry, nonfinite_paths,
+                              parse_fault_spec)
+from repro.service import (DEADLINE_EXCEEDED, INVALID_REQUEST, Lane, McSpec,
+                           MCRiskRequest, NUMERICAL_ERROR, PriceRequest,
+                           PriceSystemsRequest, PricingService, QUEUE_FULL,
+                           Scheduler, SearchRequest, SearchWarmup,
+                           ServiceConfig, SpanWork, serve, validate_request)
+
+
+def _space(**kw):
+    d = dict(skus=(SKU("laptop", 200.0, 2e6), SKU("server", 400.0, 5e5)),
+             processes=("7nm", "12nm"), integrations=("MCM",),
+             chiplet_counts=(1, 2, 4), allow_reuse=True)
+    d.update(kw)
+    return DesignSpace(**d)
+
+
+@pytest.fixture(scope="module")
+def space():
+    return _space()
+
+
+@pytest.fixture(scope="module")
+def evaluator(space):
+    return ChunkedEvaluator(space, candidates_per_chunk=16)
+
+
+@pytest.fixture(scope="module")
+def oracle(space):
+    # fused=False: the legacy host-packing parity oracle the degraded
+    # service path must match bit-exactly (after the float32 cast)
+    return ChunkedEvaluator(space, candidates_per_chunk=16, fused=False)
+
+
+@pytest.fixture(autouse=True)
+def _no_env_faults(monkeypatch):
+    # a stray REPRO_FAULTS (e.g. the CI chaos job's) must not leak into
+    # services these tests construct; faults are injected explicitly.
+    monkeypatch.delenv("REPRO_FAULTS", raising=False)
+
+
+CFG = ServiceConfig(chunk=16, split=4, warm_mc=((64, (0.5, 0.9)),))
+
+
+def _f32_rows_equal(resp_arrays, j, cr):
+    """One served row vs one oracle CandidateResult: exact f32 casts."""
+    assert np.array_equal(resp_arrays.sku_unit_total[j],
+                          np.float32(cr.sku_unit_total))
+    assert np.array_equal(resp_arrays.sku_unit_re[j],
+                          np.float32(cr.sku_unit_re))
+    assert np.array_equal(resp_arrays.sku_unit_nre[j],
+                          np.float32(cr.sku_unit_nre))
+    assert resp_arrays.portfolio_cost[j] == np.float32(cr.portfolio_cost)
+
+
+# ---------------------------------------------------------------------------
+# Fault injector: deterministic schedules, gating, parse errors
+# ---------------------------------------------------------------------------
+
+
+def test_fault_spec_parse_and_grammar():
+    seed, rules = parse_fault_spec(
+        "seed=42; dispatch_error:p=0.3 ;stall:p=1.0,ms=1500,n=1")
+    assert seed == 42
+    assert rules["dispatch_error"].prob == 0.3
+    assert rules["stall"].ms == 1500.0 and rules["stall"].max_fires == 1
+    with pytest.raises(ValueError):
+        parse_fault_spec("explode:p=1.0")          # unknown kind
+    with pytest.raises(ValueError):
+        parse_fault_spec("stall:ms=5")             # p= is required
+    with pytest.raises(ValueError):
+        parse_fault_spec("poison:p=1.5")           # p outside [0, 1]
+    with pytest.raises(ValueError):
+        parse_fault_spec("poison:p=0.5,zap=1")     # unknown option
+    assert not FaultInjector("")                   # falsy when rule-free
+    assert not FaultInjector("seed=7")
+    assert FaultInjector("poison:p=0.0")           # enabled, never fires
+
+
+def test_fault_schedule_deterministic_and_capped():
+    spec_str = "seed=42;dispatch_error:p=0.5;stall:p=1.0,ms=250,n=2"
+    a, b = FaultInjector(spec_str), FaultInjector(spec_str)
+    seq_a = [a.fire("dispatch_error") is not None for _ in range(64)]
+    seq_b = [b.fire("dispatch_error") is not None for _ in range(64)]
+    assert seq_a == seq_b                  # a schedule, not a dice roll
+    assert any(seq_a) and not all(seq_a)
+    # lifetime cap: p=1.0 but n=2 -> exactly two fires ever
+    assert sum(a.fire("stall") is not None for _ in range(10)) == 2
+    assert a.stats()["fired"]["stall"] == 2
+    # per-kind independent streams: checking other kinds in between must
+    # not shift a kind's schedule
+    c = FaultInjector("seed=42;dispatch_error:p=0.5;poison:p=0.5")
+    seq_c = []
+    for _ in range(64):
+        c.fire("poison")
+        seq_c.append(c.fire("dispatch_error") is not None)
+    assert seq_c == seq_a
+    # payload rng is deterministic too
+    assert FaultInjector(spec_str).rng("poison", 3).randrange(100) == \
+        FaultInjector(spec_str).rng("poison", 3).randrange(100)
+    # unseeded kinds never fire and cost one dict lookup
+    assert a.fire("flood") is None
+
+
+# ---------------------------------------------------------------------------
+# Retry + circuit breaker units
+# ---------------------------------------------------------------------------
+
+
+def test_call_with_retry():
+    calls, slept, seen = [], [], []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise RuntimeError("boom")
+        return "ok"
+
+    out = call_with_retry(flaky, RetryPolicy(retries=2, backoff_s=0.01),
+                          on_retry=lambda n, e: seen.append(n),
+                          sleep=slept.append)
+    assert out == "ok" and len(calls) == 3
+    assert slept == [0.01, 0.02]           # linear backoff
+    assert seen == [1, 2]
+
+    def always():
+        raise ValueError("nope")
+
+    with pytest.raises(ValueError):
+        call_with_retry(always, RetryPolicy(retries=1), sleep=lambda s: None)
+
+
+def test_circuit_breaker_lifecycle_and_cooldown_restart():
+    t = [0.0]
+    events = []
+    br = CircuitBreaker(threshold=2, cooldown_s=1.0, clock=lambda: t[0],
+                        on_event=events.append)
+    assert br.allow()
+    br.record_failure()                    # 1 of 2: still closed
+    assert br.state == "closed" and br.allow()
+    br.record_failure()                    # threshold -> open
+    assert br.state == "open" and not br.allow()
+    t[0] = 0.5
+    assert not br.allow()                  # cooling down
+    t[0] = 1.1
+    assert br.allow() and br.state == "half_open"   # the probe
+    br.record_failure()                    # failed probe -> re-open
+    assert br.state == "open"
+    t[0] = 1.5
+    # the cool-down restarted at the FAILED PROBE (t=1.1), not at the
+    # original open (t=0.0) — no instant re-probe loop
+    assert not br.allow()
+    t[0] = 2.2
+    assert br.allow()
+    br.record_success()
+    assert br.state == "closed" and br.allow()
+    assert events == ["open", "probe", "open", "probe", "close"]
+    snap = br.snapshot()
+    assert snap["opens"] == 2 and snap["closes"] == 1 and snap["probes"] == 2
+    # open-duration accounting spans the failed probe: opened at 0.0,
+    # recovered at 2.2
+    assert snap["open_s_total"] == pytest.approx(2.2)
+
+
+# ---------------------------------------------------------------------------
+# Watchdog unit
+# ---------------------------------------------------------------------------
+
+
+def test_watchdog_one_trip_per_stall():
+    stalls = []
+    wd = Watchdog(timeout_s=0.05, on_stall=stalls.append, poll_s=0.01)
+    wd.start()
+    try:
+        wd.enter()
+        time.sleep(0.15)                   # one stuck "tick"
+        assert wd.trips == 1               # latched: not once per poll
+        assert len(stalls) == 1 and stalls[0] >= 0.05
+        wd.exit()
+        time.sleep(0.05)
+        assert wd.trips == 1               # idle: no trips
+        wd.enter()
+        wd.exit()                          # fast tick: no trip
+        time.sleep(0.03)
+        assert wd.trips == 1
+    finally:
+        wd.stop()
+    assert not wd.snapshot()["running"]
+    with pytest.raises(ValueError):
+        Watchdog(0.0, stalls.append)
+
+
+# ---------------------------------------------------------------------------
+# Numerical guardrails: walker, in-graph mask, packing validation
+# ---------------------------------------------------------------------------
+
+
+def test_nonfinite_paths_walker():
+    assert nonfinite_paths({"a": 1.0, "b": [1, 2, "x"], "c": None}) == []
+    out = nonfinite_paths({"a": 1.0, "b": float("nan")}, path="req")
+    assert len(out) == 1 and "req" in out[0] and "'b'" in out[0]
+    arr = np.ones((4,), np.float32)
+    arr[2] = np.inf
+    out = nonfinite_paths({"x": arr})
+    assert out and "'x'" in out[0]
+    assert nonfinite_paths(np.arange(5)) == []     # int arrays are exempt
+
+    @dataclasses.dataclass
+    class D:
+        v: float
+
+    assert nonfinite_paths(D(float("inf")))
+    assert nonfinite_paths(D(3.0)) == []
+
+
+def test_finite_rows_mask():
+    a = jnp.asarray([[1.0, 2.0], [np.nan, 1.0], [3.0, 4.0]], jnp.float32)
+    b = jnp.asarray([1.0, 2.0, np.inf], jnp.float32)
+    assert np.asarray(finite_rows(a, b)).tolist() == [True, False, False]
+    assert np.asarray(finite_rows(a)).tolist() == [True, False, True]
+
+
+def test_from_systems_rejects_bad_parameters():
+    good = spec({"kind": "soc", "name": "a", "area": 100.0,
+                 "process": "7nm", "quantity": 1.0})
+    nan_area = spec({"kind": "soc", "name": "b", "area": float("nan"),
+                     "process": "7nm", "quantity": 1.0})
+    neg_area = spec({"kind": "soc", "name": "c", "area": -50.0,
+                     "process": "7nm", "quantity": 1.0})
+    with pytest.raises(ValueError, match="invalid system parameters"):
+        SystemBatch.from_systems([good, nan_area], share_nre=[0, 1])
+    with pytest.raises(ValueError, match="invalid system parameters"):
+        SystemBatch.from_systems([good, neg_area], share_nre=[0, 1])
+    SystemBatch.from_systems([good], share_nre=[0])    # sane spec passes
+
+
+def test_validate_request_rejects_nonfinite_fields():
+    assert validate_request(PriceRequest(indices=[1, 2])) is None
+    assert validate_request(MCRiskRequest(
+        indices=[1], mc=McSpec(sigmas=Uncertainty(
+            defect_sigma=float("nan"))))) is not None
+    assert validate_request(SearchRequest(
+        jump_prob=float("inf"))) is not None
+    assert validate_request(PriceSystemsRequest(specs=(
+        {"kind": "soc", "name": "x", "area": float("inf"),
+         "process": "7nm", "quantity": 1.0},))) is not None
+    # NaN deadlines are non-finite; non-positive ones can never be met
+    assert validate_request(PriceRequest(
+        indices=[1], deadline_ms=float("nan"))) is not None
+    assert validate_request(PriceRequest(
+        indices=[1], deadline_ms=-5.0)) is not None
+    assert validate_request(PriceRequest(
+        indices=[1], deadline_ms=25.0)) is None
+
+
+def test_service_envelopes_nonfinite_requests(space):
+    reqs = [
+        MCRiskRequest(indices=[1], mc=McSpec(sigmas=Uncertainty(
+            defect_sigma=float("nan")))),
+        PriceRequest(indices=[1], deadline_ms=0.0),
+        PriceSystemsRequest(specs=(
+            {"kind": "soc", "name": "x", "area": float("inf"),
+             "process": "7nm", "quantity": 1.0},)),
+        PriceSystemsRequest(specs=(
+            {"kind": "soc", "name": "y", "area": -120.0,
+             "process": "7nm", "quantity": 1.0},)),
+    ]
+    resps, svc = serve(space, reqs, CFG)
+    for r in resps:
+        assert not r.ok and r.error.code == INVALID_REQUEST, r
+    assert svc.snapshot()["ticks"] == 0    # rejected before the device
+
+
+# ---------------------------------------------------------------------------
+# Deadlines + cancellation
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_expire():
+    sched = Scheduler(slots=8, max_pending=100)
+    lane = Lane(kind="chunk")
+
+    def span(deadline):
+        return SpanWork(owner=object(), lane=lane,
+                        idx=np.arange(3, dtype=np.int64),
+                        deadline_t=deadline)
+
+    w1, w2, w3 = span(1.0), span(None), span(5.0)
+    assert sched.admit([w1, w2, w3], 9)
+    assert sched.expire(0.5) == []
+    assert sched.expire(2.0) == [w1]
+    assert list(sched.queue) == [w2, w3]
+    assert sched.expire(10.0) == [w3]
+    assert list(sched.queue) == [w2]       # no-deadline work never expires
+    assert sched.pending_rows == 9         # policy only: budget untouched
+
+
+def test_deadline_exceeded_in_queue(space):
+    """An in-queue request whose deadline passes before its first tick is
+    rejected with a typed envelope; its sibling is untouched and the row
+    budget is fully released."""
+
+    async def _main():
+        svc = PricingService(space, CFG)
+        doomed = asyncio.ensure_future(svc.submit(
+            PriceRequest(indices=[0, 1, 2], deadline_ms=10.0)))
+        sibling = asyncio.ensure_future(svc.submit(
+            PriceRequest(indices=[3, 4])))
+        await asyncio.sleep(0.05)          # both admitted; deadline passes
+        await svc.start()                  # first tick expires the doomed
+        r_doomed, r_sib = await asyncio.gather(doomed, sibling)
+        await svc.stop()
+        return svc, r_doomed, r_sib
+
+    svc, r_doomed, r_sib = asyncio.run(_main())
+    assert not r_doomed.ok
+    assert r_doomed.error.code == DEADLINE_EXCEEDED
+    assert "0/3 rows" in r_doomed.error.message
+    assert r_sib.ok
+    assert svc.res.deadline_rejected == 1
+    assert svc.snapshot()["resilience"]["deadline_rejected"] == 1
+    assert svc.sched.pending_rows == 0
+    assert svc._deadline_count == 0
+
+
+def test_search_deadline_checkpoints_between_generations(space):
+    """A mid-flight search aborts cleanly at a generation boundary: some
+    generations tick, then the deadline wins — never a hung request."""
+    cfg = dataclasses.replace(
+        CFG, warm_search=(SearchWarmup(population=8, elite=2),))
+
+    async def _main():
+        svc = PricingService(space, cfg)
+        await svc.start()
+        r = await svc.submit(SearchRequest(
+            seed=1, population=8, generations=5000, elite=2,
+            deadline_ms=250.0))
+        await svc.stop()
+        return svc, r
+
+    svc, r = asyncio.run(_main())
+    assert not r.ok and r.error.code == DEADLINE_EXCEEDED
+    assert svc.snapshot()["ticks_by_lane"].get("gen", 0) >= 1
+    assert svc.sched.pending_rows == 0     # budget released on abort
+
+
+def test_cancel_in_queue_releases_budget(space):
+    async def _main():
+        svc = PricingService(space, CFG)
+        task = asyncio.ensure_future(
+            svc.submit(PriceRequest(indices=[0, 1, 2])))
+        await asyncio.sleep(0)             # admitted; loop not started yet
+        assert svc.sched.pending_rows == 3
+        task.cancel()
+        with pytest.raises(asyncio.CancelledError):
+            await task
+        assert svc.sched.pending_rows == 0
+        assert not svc.sched.has_work()
+        await svc.start()                  # the service still serves
+        r = await svc.submit(PriceRequest(indices=[5, 6]))
+        await svc.stop()
+        return svc, r
+
+    svc, r = asyncio.run(_main())
+    assert r.ok
+    assert svc.res.cancelled == 1
+    assert svc.snapshot()["resilience"]["cancelled"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Retry -> breaker -> legacy fallback (degraded mode) -> recovery
+# ---------------------------------------------------------------------------
+
+
+def test_fused_failure_degrades_to_oracle_then_recovers(space, evaluator,
+                                                        oracle):
+    """With the fused path hard-down, responses degrade to the legacy
+    host-packing evaluator — float32 casts of the oracle's float64s,
+    bit for bit — and once the fault clears, a half-open probe restores
+    the fused path bit-exactly."""
+    cfg = dataclasses.replace(CFG, breaker_cooldown_s=60.0)
+    p_idx = [0, 1, 2, 3, 4]
+    m_idx = [1, 2, 3]
+
+    async def _main():
+        svc = PricingService(space, cfg)
+        svc.faults = FaultInjector("seed=1;dispatch_error:p=1.0")
+        await svc.start()
+        r1 = await svc.submit(PriceRequest(indices=p_idx))
+        r2 = await svc.submit(MCRiskRequest(
+            indices=m_idx, mc=McSpec(draws=64, quantiles=(0.5, 0.9),
+                                     seed=7)))
+        # the fault clears; drop the cool-down so the next tick probes
+        svc.faults = FaultInjector("")
+        svc.breaker.cooldown_s = 0.0
+        r3 = await svc.submit(PriceRequest(indices=p_idx))
+        await svc.stop()
+        return svc, r1, r2, r3
+
+    svc, r1, r2, r3 = asyncio.run(_main())
+    assert r1.ok and r2.ok and r3.ok
+
+    # r1: fully degraded, every row flagged, values == f32(oracle f64)
+    assert r1.degraded and r1.degraded_rows.all()
+    legacy = oracle.evaluate([space.candidate_at(i) for i in p_idx])
+    for j, cr in enumerate(legacy):
+        _f32_rows_equal(r1.result, j, cr)
+
+    # r2: breaker already open -> straight to fallback (no new attempts);
+    # risk stats equal f32 casts of the oracle's, despite the service
+    # chunk holding different padding than the oracle's own chunk
+    assert r2.degraded and r2.degraded_rows.all()
+    legacy_mc = oracle.evaluate(
+        [space.candidate_at(i) for i in m_idx],
+        mc_key=jax.random.PRNGKey(7), mc_draws=64,
+        mc_quantiles=(0.5, 0.9))
+    for j, cr in enumerate(legacy_mc):
+        _f32_rows_equal(r2.result, j, cr)
+        for k, v in cr.risk.items():
+            assert r2.result.risk[k][j] == np.float32(v), k
+
+    # r3: recovered — fused again, bit-exact vs the direct call, and the
+    # degraded r1 result was never cached
+    assert not r3.degraded and not r3.cached
+    direct = evaluator.evaluate_indices(np.asarray(p_idx))
+    assert np.array_equal(r3.result.sku_unit_total, direct.sku_unit_total)
+    assert np.array_equal(r3.result.portfolio_cost, direct.portfolio_cost)
+
+    res = svc.snapshot()["resilience"]
+    assert res["fallback_ticks"] == 2
+    assert res["fallback_rows"] == len(p_idx) + len(m_idx)
+    assert res["retries"] == 1             # one retry inside the r1 tick
+    assert res["fused_failures"] == 2      # first attempt + its retry
+    assert res["breaker_opens"] == 1
+    assert res["breaker_probes"] == 1
+    assert res["breaker_closes"] == 1
+    assert res["breaker"]["state"] == "closed"
+    assert res["loop_errors"] == 0
+
+
+def test_poisoned_row_fails_owner_only(space, evaluator):
+    """A NaN row injected post-fetch fails exactly its owner with a
+    typed numerical_error; the co-batched sibling stays bit-exact."""
+    a_idx, b_idx = [0, 1, 2, 3, 4, 5, 6, 7], [8, 9, 10, 11, 0, 1, 2, 3]
+
+    async def _main():
+        svc = PricingService(space, CFG)
+        svc.faults = FaultInjector("seed=3;poison:p=1.0,n=1")
+        await svc.start()
+        ra, rb = await asyncio.gather(
+            svc.submit(PriceRequest(indices=a_idx)),
+            svc.submit(PriceRequest(indices=b_idx)))
+        await svc.stop()
+        return svc, ra, rb
+
+    svc, ra, rb = asyncio.run(_main())
+    failed = [r for r in (ra, rb) if not r.ok]
+    clean = [r for r in (ra, rb) if r.ok]
+    assert len(failed) == 1 and len(clean) == 1
+    assert failed[0].error.code == NUMERICAL_ERROR
+    assert "non-finite" in failed[0].error.message
+    clean_idx = a_idx if clean[0] is ra else b_idx
+    direct = evaluator.evaluate_indices(np.asarray(clean_idx))
+    assert np.array_equal(clean[0].result.sku_unit_total,
+                          direct.sku_unit_total)
+    assert np.array_equal(clean[0].result.portfolio_cost,
+                          direct.portfolio_cost)
+    res = svc.snapshot()["resilience"]
+    assert res["numerical_errors"] == 1
+    assert res["faults_injected"] == 1
+    assert svc.sched.pending_rows == 0
+
+
+# ---------------------------------------------------------------------------
+# Backpressure recovery under concurrent submitters
+# ---------------------------------------------------------------------------
+
+
+def test_backpressure_recovery_under_concurrency(space):
+    """queue_full under a concurrent burst, then full drain, then every
+    rejected submitter is re-admitted and served."""
+    cfg = dataclasses.replace(CFG, max_pending=64)
+    size = space.size()
+    idx = (np.arange(32) % size).tolist()
+
+    async def _main():
+        svc = PricingService(space, cfg)
+        await svc.start()
+        burst = [asyncio.ensure_future(svc.submit(PriceRequest(indices=idx)))
+                 for _ in range(6)]
+        first = await asyncio.gather(*burst)
+        retries = [await svc.submit(PriceRequest(indices=idx))
+                   for _ in range(sum(not r.ok for r in first))]
+        await svc.stop()
+        return svc, first, retries
+
+    svc, first, retries = asyncio.run(_main())
+    rejected = [r for r in first if not r.ok]
+    assert len(rejected) == 4              # 2 x 32 rows fit the 64 budget
+    assert all(r.error.code == QUEUE_FULL for r in rejected)
+    assert all("row budget" in r.error.message for r in rejected)
+    assert all(r.ok for r in first if r.ok)
+    assert len(retries) == 4 and all(r.ok for r in retries)
+    assert svc.sched.pending_rows == 0
+    assert svc.snapshot()["n_rejected"] == 4
+
+
+# ---------------------------------------------------------------------------
+# Watchdog on a live service: stall -> trip -> flight dump -> survive
+# ---------------------------------------------------------------------------
+
+
+def test_watchdog_trips_and_dumps_on_stalled_tick(space, tmp_path,
+                                                  monkeypatch):
+    monkeypatch.setenv("REPRO_FLIGHT_DIR", str(tmp_path))
+    cfg = dataclasses.replace(CFG, watchdog_timeout_s=0.15)
+
+    async def _main():
+        svc = PricingService(space, cfg)
+        svc.faults = FaultInjector("seed=5;stall:p=1.0,ms=500,n=1")
+        await svc.start()
+        r1 = await svc.submit(PriceRequest(indices=[0, 1]))
+        r2 = await svc.submit(PriceRequest(indices=[2, 3]))
+        await svc.stop()
+        return svc, r1, r2
+
+    svc, r1, r2 = asyncio.run(_main())
+    assert r1.ok and r2.ok                 # a stall delays, never corrupts
+    res = svc.snapshot()["resilience"]
+    assert res["watchdog_trips"] == 1      # latched: one trip per stall
+    assert res["watchdog_dumps"] == 1
+    dumps = list(tmp_path.glob("flight_*.json"))
+    assert len(dumps) == 1                 # exactly one recording
+    assert svc.watchdog.snapshot()["trips"] == 1
+    assert res["loop_errors"] == 0
+
+
+# ---------------------------------------------------------------------------
+# A seeded multi-fault chaos schedule: typed-or-correct, zero leakage
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_schedule_typed_and_bit_exact_by_provenance(space, evaluator,
+                                                          oracle):
+    """Under a seeded schedule of dispatch errors, poisoned rows, floods
+    and a forced recompile, every response is ok or carries a typed
+    envelope; ok rows are bit-exact against the oracle their provenance
+    mask names (fused vs legacy-f32); nothing escapes the tick loop."""
+    spec_str = ("seed=13;dispatch_error:p=0.4;poison:p=0.35,n=2;"
+                "flood:p=0.25,n=2;recompile:p=0.5,n=1")
+    cfg = dataclasses.replace(CFG, breaker_cooldown_s=0.05,
+                              result_cache_entries=0)
+    rng = np.random.default_rng(7)
+    batches = [rng.integers(0, space.size(), 8).tolist() for _ in range(12)]
+
+    async def _main():
+        svc = PricingService(space, cfg)
+        svc.faults = FaultInjector(spec_str)
+        await svc.start()
+        resps = await asyncio.gather(
+            *(svc.submit(PriceRequest(indices=b)) for b in batches))
+        await svc.stop()
+        return svc, resps
+
+    svc, resps = asyncio.run(_main())
+    res = svc.snapshot()["resilience"]
+    assert res["loop_errors"] == 0
+    assert res["faults_injected"] >= 1
+    allowed = {QUEUE_FULL, NUMERICAL_ERROR}
+    n_ok = 0
+    for idx_list, r in zip(batches, resps):
+        if not r.ok:
+            assert r.error.code in allowed, r.error
+            continue
+        n_ok += 1
+        idx = np.asarray(idx_list, np.int64)
+        mask = (r.degraded_rows if r.degraded
+                else np.zeros(idx.size, bool))
+        fused = evaluator.evaluate_indices(idx)
+        legacy = (oracle.evaluate_indices_legacy(idx)
+                  if mask.any() else None)
+        for j in range(idx.size):
+            src = legacy if mask[j] else fused
+            assert np.array_equal(r.result.sku_unit_total[j],
+                                  src.sku_unit_total[j]), (j, mask[j])
+            assert r.result.portfolio_cost[j] == src.portfolio_cost[j]
+    assert n_ok >= 1                       # the service kept serving
+    assert svc.sched.pending_rows == 0
+
+
+# ---------------------------------------------------------------------------
+# Faults disabled (the default): no overhead, no counter movement
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_faults_leave_no_trace(space):
+    reqs = [PriceRequest(indices=[0, 1, 2]),
+            MCRiskRequest(indices=[3, 4], mc=McSpec(draws=64, seed=2)),
+            PriceRequest(indices=[5], deadline_ms=60_000.0)]
+    resps, svc = serve(space, reqs, CFG)
+    assert all(r.ok for r in resps), [r.error for r in resps]
+    assert not any(r.degraded for r in resps)
+    assert not svc.faults                  # env-off default
+    res = svc.snapshot()["resilience"]
+    for key in ("retries", "fused_failures", "fallback_ticks",
+                "fallback_rows", "numerical_errors", "deadline_rejected",
+                "cancelled", "watchdog_trips", "watchdog_dumps",
+                "loop_errors", "loop_restarts", "faults_injected",
+                "breaker_opens"):
+        assert res[key] == 0, key
+    assert res["breaker"]["state"] == "closed"
+    assert res["deadlines_active"] == 0    # met deadlines drain the gauge
+    assert svc.snapshot()["recompiles_after_warmup"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Bench guard: infrastructure failures are typed exits, not tracebacks
+# ---------------------------------------------------------------------------
+
+
+_SCRIPT = pathlib.Path(__file__).resolve().parents[1] / "scripts" / \
+    "check_bench_regression.py"
+_GOOD_ENGINE = '{"systems_per_sec": 100.0, "worst_rel": 0.0}\n'
+
+
+def _run_guard(root):
+    return subprocess.run(
+        [sys.executable, str(_SCRIPT), "engine", "--root", str(root)],
+        capture_output=True, text=True, timeout=60)
+
+
+def test_bench_guard_missing_and_truncated_files(tmp_path):
+    basedir = tmp_path / "benchmarks" / "baselines"
+    basedir.mkdir(parents=True)
+    (basedir / "BENCH_engine.json").write_text(_GOOD_ENGINE)
+
+    p = _run_guard(tmp_path)               # current run missing
+    assert p.returncode == 2, p.stdout + p.stderr
+    assert "MISSING" in p.stdout
+    assert "Traceback" not in p.stdout + p.stderr
+
+    (tmp_path / "BENCH_engine.json").write_text('{"systems_per_sec": 5')
+    p = _run_guard(tmp_path)               # truncated json
+    assert p.returncode == 2, p.stdout + p.stderr
+    assert "UNREADABLE" in p.stdout
+    assert "Traceback" not in p.stdout + p.stderr
+
+    (tmp_path / "BENCH_engine.json").write_text(_GOOD_ENGINE)
+    p = _run_guard(tmp_path)               # healthy run passes
+    assert p.returncode == 0, p.stdout + p.stderr
+
+    (tmp_path / "BENCH_engine.json").write_text(
+        '{"systems_per_sec": 1.0, "worst_rel": 1.0}')
+    p = _run_guard(tmp_path)               # regression is exit 1, not 2
+    assert p.returncode == 1, p.stdout + p.stderr
+    assert "FAIL" in p.stdout
