@@ -24,6 +24,13 @@ Asserts (the degraded-mode guarantees of README "Failure handling"):
   * every fault kind in the schedule actually fired (a chaos run that
     quietly tested nothing must fail).
 
+A second, separate sub-run injects the ``crash`` fault kind mid-search
+(the moral equivalent of SIGKILL at a tick boundary), restarts the
+service over the same durability directory, and proves the journal
+replay recovers everything: zero requests lost, the resumed search
+bit-exact against the uninterrupted ``portfolio_search`` oracle, and
+recovery latency reported.
+
 Reports recovery latency (circuit-breaker open time) and degraded-mode
 throughput (fallback rows/s), and writes BENCH_chaos.json for
 scripts/check_bench_regression.py.
@@ -31,26 +38,28 @@ scripts/check_bench_regression.py.
 import argparse
 import asyncio
 import os
+import pathlib
 import tempfile
 import time
 
 import jax
 import numpy as np
 
-from repro.dse import ChunkedEvaluator
+from repro.dse import ChunkedEvaluator, portfolio_search
 from repro.resilience import FaultInjector
-from repro.service import (DEADLINE_EXCEEDED, INVALID_REQUEST, McSpec,
+from repro.service import (DEADLINE_EXCEEDED, DurabilityConfig,
+                           INVALID_REQUEST, McSpec,
                            MCRiskRequest, NUMERICAL_ERROR, PriceRequest,
                            PriceSystemsRequest, PricingService, QUEUE_FULL,
-                           RankRequest, SearchRequest, SearchWarmup,
-                           ServiceConfig)
+                           RankRequest, RequestJournal, SearchRequest,
+                           SearchWarmup, ServiceConfig, SHUTTING_DOWN)
 
 from .common import emit, write_bench_json
 from .dse_bench import SPACE
 
 # The closed set a client may dispatch on; anything else is a bug.
 TYPED_CODES = {QUEUE_FULL, INVALID_REQUEST, DEADLINE_EXCEEDED,
-               NUMERICAL_ERROR}
+               NUMERICAL_ERROR, SHUTTING_DOWN}
 
 # Every kind enabled, tuned so the seeded schedule exercises each one
 # within a --fast run: one long stall (watchdog food), a steady diet of
@@ -128,6 +137,86 @@ def _parity_mismatches(resp, idx, kind, fused_ev, legacy_ev) -> int:
                      for k in resp.result.risk)
         bad += not ok
     return bad
+
+
+# The crash scenario runs as its own sub-run (the main schedule's
+# "every enabled kind fired" assertion would otherwise have to wait for
+# a crash that, by design, ends the run).  seed=1 p=0.3 first fires at
+# fault check 6, so a few generations — and their checkpoints — land
+# before the process "dies".
+CRASH_FAULTS = "seed=1;crash:p=0.3,n=1"
+
+
+def _crash_recovery(fast: bool) -> dict:
+    """Injected crash mid-search -> restart -> journal replay: measures
+    recovery latency and proves the resumed search bit-exact against the
+    uninterrupted ``portfolio_search`` oracle with zero lost requests."""
+    gens = 8 if fast else 12
+    sr = SearchRequest(seed=3, population=16, generations=gens, elite=4)
+    rng = np.random.default_rng(7)
+    size = SPACE.size()
+    prices = [PriceRequest(indices=rng.integers(0, size, 16).tolist())
+              for _ in range(3)]
+    with tempfile.TemporaryDirectory(prefix="repro_chaos_crash_") as d:
+        dcfg = DurabilityConfig(directory=pathlib.Path(d),
+                                checkpoint_every=1)
+        cfg = ServiceConfig(chunk=32, split=8,
+                            warm_search=(SearchWarmup(population=16,
+                                                      elite=4),),
+                            durability=dcfg)
+
+        async def _main():
+            svc = PricingService(SPACE, cfg)
+            await svc.start()
+            svc.faults = FaultInjector(CRASH_FAULTS)
+            first = await asyncio.gather(svc.submit(sr),
+                                         *(svc.submit(p) for p in prices))
+            crashes = svc.snapshot()["durability"]["crashes"]
+            await svc.stop()
+            svc.faults = FaultInjector("")
+            t0 = time.perf_counter()
+            await svc.start()
+            replayed = await svc.drain_replayed()
+            recovery_s = time.perf_counter() - t0
+            await svc.stop()
+            return svc, list(first), replayed, recovery_s, crashes
+
+        svc, first, replayed, recovery_s, crashes = asyncio.run(_main())
+        untyped = sum(1 for r in first + replayed
+                      if not r.ok and r.error.code not in TYPED_CODES)
+        search_resp = next((r for r in replayed + first
+                            if r.kind == "search" and r.ok), None)
+        oracle = portfolio_search(SPACE, jax.random.PRNGKey(3),
+                                  population=16, generations=gens, elite=4)
+        bitexact = int(
+            search_resp is not None
+            and search_resp.result.history == oracle.history
+            and [c.label for c in search_resp.result.ranked]
+            == [c.label for c in oracle.ranked])
+        j = RequestJournal(dcfg.journal_dir)
+        lost = len(j.replay())
+        j.close()
+        snap = svc.snapshot()["durability"]
+    out = {
+        "crash_recovered": int(crashes >= 1),
+        "crash_replayed": snap["journal_replayed"],
+        "crash_replayed_lost": lost,
+        "crash_resume_bitexact": bitexact,
+        "crash_checkpoints_restored": snap["checkpoints_restored"],
+        "crash_untyped_errors": untyped,
+        "crash_recovery_s": recovery_s,
+    }
+    emit("chaos: crash -> journal replay recovery", [{
+        "crashes": crashes, "replayed": out["crash_replayed"],
+        "lost": lost, "bitexact": bitexact,
+        "ckpt_restored": out["crash_checkpoints_restored"],
+        "recovery_s": recovery_s}])
+    assert out["crash_recovered"] == 1, "crash fault never fired"
+    assert untyped == 0, "crash recovery produced untyped errors"
+    assert lost == 0, f"{lost} journaled requests were silently lost"
+    assert bitexact == 1, \
+        "resumed search is not bit-exact vs the uninterrupted oracle"
+    return out
 
 
 def run(fast: bool = False, clients: int = 6) -> dict:
@@ -246,6 +335,9 @@ def run(fast: bool = False, clients: int = 6) -> dict:
         "fallback_rows_per_sec": summary["degraded_rows_per_sec"],
         "recovery_s": summary["recovery_open_s_total"],
         "loop_errors": summary["loop_errors"]}])
+    # crash/restore sub-run: its keys ride the same BENCH_chaos.json so
+    # the regression guard pins the recovery invariants too.
+    summary.update(_crash_recovery(fast))
     write_bench_json("chaos", summary)
 
     # -- acceptance --------------------------------------------------------

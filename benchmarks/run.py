@@ -15,7 +15,8 @@ def main() -> None:
     from . import (ablations, chaos_bench, codesign, dse_bench,
                    engine_bench, fig2_yield_cost, fig4_re_integration,
                    fig5_amd, fig6_single_system, fig8_scms, fig9_ocme,
-                   fig10_fsmc, kernels_bench, roofline, service_bench)
+                   fig10_fsmc, kernels_bench, restart_bench, roofline,
+                   service_bench)
 
     benches = [
         ("fig2", fig2_yield_cost), ("fig4", fig4_re_integration),
@@ -25,9 +26,10 @@ def main() -> None:
         ("roofline", roofline), ("codesign", codesign),
         ("kernels", kernels_bench), ("engine", engine_bench),
         ("dse", dse_bench), ("service", service_bench),
-        # chaos goes LAST: it force-clears fused jit caches and injects
-        # faults into its own service — nothing downstream to perturb.
-        ("chaos", chaos_bench),
+        # restart SIGKILLs its own child process; chaos goes LAST: it
+        # force-clears fused jit caches and injects faults into its own
+        # service — nothing downstream to perturb.
+        ("restart", restart_bench), ("chaos", chaos_bench),
     ]
     failures = 0
     for name, mod in benches:

@@ -68,6 +68,26 @@ RULES = {
         ("untyped_errors", "max", 0.0),
         ("stall_dump_deficit", "max", 0.0),
         ("fault_kinds_injected", "min", 5.0),
+        # crash/restore sub-run (see chaos_bench._crash_recovery): the
+        # injected crash must fire, replay must answer every journaled
+        # request, and the resumed search must be bit-exact.
+        ("crash_recovered", "min", 1.0),
+        ("crash_resume_bitexact", "min", 1.0),
+        ("crash_replayed_lost", "max", 0.0),
+        ("crash_untyped_errors", "max", 0.0),
+    ],
+    "restart": [
+        # Recovery invariants of the SIGKILL-mid-search oracle
+        # (benchmarks/restart_bench.py): a real process death, a resume
+        # over the same durability directory, bit-exact parity and zero
+        # lost admissions.  recovery_s is a boundedness invariant, not a
+        # perf race — the ceiling is deliberately generous.
+        ("survived", "min", 1.0),
+        ("child_killed", "min", 1.0),
+        ("checkpoints_at_kill", "min", 2.0),
+        ("search_bitexact", "min", 1.0),
+        ("lost_requests", "max", 0.0),
+        ("recovery_s", "max", 300.0),
     ],
 }
 

@@ -121,11 +121,18 @@ def restore(directory: Path, step: int, like: Any,
 
 
 class CheckpointManager:
-    """Retention + auto-resume glue."""
+    """Retention + auto-resume glue.
+
+    :meth:`restore_latest` is corruption-tolerant: a retained step whose
+    manifest digest no longer matches its arrays (bit rot, torn copy) is
+    skipped — counted in ``corrupt_fallbacks`` — and the previous
+    retained step is restored instead of raising through.  Only when
+    every retained step is unreadable does the error surface."""
 
     def __init__(self, directory: Path, keep: int = 3):
         self.directory = Path(directory)
         self.keep = keep
+        self.corrupt_fallbacks = 0
 
     def save(self, step: int, tree: Any, extra: Optional[Dict] = None):
         path = save(self.directory, step, tree, extra)
@@ -149,11 +156,37 @@ class CheckpointManager:
     def latest(self) -> Optional[int]:
         return latest_step(self.directory)
 
+    def steps(self) -> List[int]:
+        """Complete (published) steps on disk, oldest first."""
+        if not self.directory.exists():
+            return []
+        return sorted(
+            int(p.name.split("_")[1])
+            for p in self.directory.iterdir()
+            if p.is_dir() and p.name.startswith("step_")
+            and ".tmp-" not in p.name
+            and (p / "manifest.json").exists())
+
     def restore_latest(self, like: Any, shardings: Any = None):
-        s = self.latest()
-        if s is None:
+        """Restore the newest readable retained step (digest-verified).
+
+        A corrupt step falls back to the previous retained one instead
+        of raising; ``(None, None)`` when no step exists, and the last
+        step's error re-raises only when *every* retained step is
+        unreadable."""
+        steps = self.steps()
+        if not steps:
             return None, None
-        return s, restore(self.directory, s, like, shardings)
+        last_err: Optional[Exception] = None
+        for s in reversed(steps):
+            try:
+                return s, restore(self.directory, s, like, shardings)
+            except Exception as e:  # noqa: BLE001 - any corruption mode
+                self.corrupt_fallbacks += 1
+                last_err = e
+        raise ValueError(
+            f"no readable checkpoint among steps {steps} in "
+            f"{self.directory}") from last_err
 
 
 class AsyncCheckpointer:

@@ -35,8 +35,8 @@ from .evaluate import (CandidateResult, ChunkShape, ChunkedEvaluator,
 from .uncertainty import (SENSITIVITY_PARAMS, Uncertainty, mc_summary,
                           mc_totals, portfolio_draws, portfolio_risk_stats,
                           sensitivities)
-from .search import (RiskConfig, SearchResult, exhaustive_search,
-                     portfolio_search)
+from .search import (RiskConfig, SearchResult, SearchState,
+                     exhaustive_search, portfolio_search)
 from .report import (detail_rows, format_table, result_rows, search_summary,
                      to_json)
 
@@ -47,7 +47,8 @@ __all__ = [
     "ChunkedEvaluator", "EvalArrays", "chunk_shape", "evaluate_direct",
     "SENSITIVITY_PARAMS", "Uncertainty", "mc_summary", "mc_totals",
     "portfolio_draws", "portfolio_risk_stats", "sensitivities",
-    "RiskConfig", "SearchResult", "exhaustive_search", "portfolio_search",
+    "RiskConfig", "SearchResult", "SearchState", "exhaustive_search",
+    "portfolio_search",
     "detail_rows", "format_table", "result_rows", "search_summary",
     "to_json",
 ]

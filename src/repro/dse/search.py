@@ -23,12 +23,14 @@ cross-check that the evolutionary loop recovers the true optimum.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+import json
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..checkpoint.store import CheckpointManager
 from ..core.engine import TRACE_COUNTS, portfolio_totals
 from ..core.explorer import pareto_front
 from ..obs import jaxhooks
@@ -104,6 +106,116 @@ def _default_mc_key(key):
     candidate under identical scenarios, so their quantile objectives are
     directly comparable (common random numbers)."""
     return jax.random.fold_in(key, 1)
+
+
+# ---------------------------------------------------------------------------
+# Search state: the checkpointable loop carrier
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SearchState:
+    """Everything the evolutionary loop needs to continue from
+    generation ``gen`` — and nothing else.
+
+    Because the key schedule is ``k_loop, k_gen = split(k_loop)`` each
+    generation and the final ranking sweep depends only on ``seen`` and
+    ``mc_key``, restoring this state reproduces an uninterrupted run
+    **bit-exactly**: same populations, same history floats, same ranked
+    result (the zero-tolerance oracle in ``tests/test_durability.py``).
+
+    The device leaves (``pop``/``k_loop``/``mc_key``/``sig``) have fixed
+    shapes given the population, so they ride
+    :mod:`repro.checkpoint.store`'s array protocol; the variable-size
+    host state (``seen``, ``history``, best-so-far) travels in the
+    manifest's ``extra`` JSON, which roundtrips Python floats exactly.
+    """
+
+    pop: Any                       # (population,) int32 candidate indices
+    k_loop: Any                    # uint32 (2,) loop PRNG key
+    mc_key: Any                    # uint32 (2,) Monte-Carlo key
+    sig: Any                       # (4,) float32 sigma vector
+    seen: set
+    history: List[Dict]
+    best_obj: float = np.inf
+    best_idx: int = -1
+    gen: int = 0                   # completed generations
+
+    @classmethod
+    def init(cls, key, population: int, size: int,
+             risk: Optional[RiskConfig]) -> "SearchState":
+        """The one shared derivation of a fresh search state from a PRNG
+        key — ``portfolio_search`` and the service's ``SearchTask`` both
+        start here, which is what makes served searches bit-exact
+        against direct calls."""
+        mc_key, sig = key, jnp.zeros((4,), jnp.float32)  # placeholders
+        if risk is not None:
+            mc_key = _default_mc_key(key)
+            sig = risk.sigmas.as_array()
+        k_init, k_loop = jax.random.split(key)
+        pop = jax.random.randint(k_init, (population,), 0, size,
+                                 dtype=jnp.int32)
+        return cls(pop=pop, k_loop=k_loop, mc_key=mc_key, sig=sig,
+                   seen=set(), history=[])
+
+    def consume(self, host, label_fn) -> None:
+        """Fold one generation's host results (priced population, gen
+        best index/objective) into the state."""
+        pop_h, gen_idx, gen_obj = host
+        self.seen.update(int(i) for i in pop_h)
+        if float(gen_obj) < self.best_obj:
+            self.best_obj, self.best_idx = float(gen_obj), int(gen_idx)
+        self.history.append({
+            "generation": self.gen,
+            "evaluated": len(self.seen),
+            "best_objective": self.best_obj,
+            "best_label": label_fn(self.best_idx),
+            "gen_best": float(gen_obj)})
+        self.gen += 1
+
+    # -- checkpoint protocol -------------------------------------------------
+
+    def tree(self) -> Dict[str, Any]:
+        return {"pop": self.pop, "k_loop": self.k_loop,
+                "mc_key": self.mc_key, "sig": self.sig}
+
+    def extra(self) -> Dict[str, Any]:
+        return {"gen": self.gen, "best_obj": float(self.best_obj),
+                "best_idx": int(self.best_idx),
+                "seen": sorted(int(i) for i in self.seen),
+                "history": list(self.history)}
+
+    @staticmethod
+    def like(population: int) -> Dict[str, Any]:
+        """The fixed-shape restore template for a given population."""
+        return {"pop": jnp.zeros((population,), jnp.int32),
+                "k_loop": jnp.zeros((2,), jnp.uint32),
+                "mc_key": jnp.zeros((2,), jnp.uint32),
+                "sig": jnp.zeros((4,), jnp.float32)}
+
+    def save(self, manager: CheckpointManager):
+        """Publish this state as checkpoint step ``gen`` (atomic
+        rename, digest-stamped, retention-K via the manager)."""
+        return manager.save(self.gen, self.tree(), extra=self.extra())
+
+    @classmethod
+    def restore_latest(cls, manager: CheckpointManager,
+                       population: int) -> Optional["SearchState"]:
+        """Newest readable checkpoint as a live state, or None when the
+        directory holds none.  Corrupt steps fall back to the previous
+        retained step (``manager.corrupt_fallbacks`` counts them)."""
+        step, tree = manager.restore_latest(cls.like(population))
+        if step is None:
+            return None
+        manifest = manager.directory / f"step_{step:08d}" / "manifest.json"
+        extra = json.loads(manifest.read_text()).get("extra", {})
+        return cls(pop=tree["pop"], k_loop=tree["k_loop"],
+                   mc_key=tree["mc_key"], sig=tree["sig"],
+                   seen=set(int(i) for i in extra.get("seen", [])),
+                   history=list(extra.get("history", [])),
+                   best_obj=float(extra.get("best_obj", np.inf)),
+                   best_idx=int(extra.get("best_idx", -1)),
+                   gen=int(extra.get("gen", step)))
 
 
 def exhaustive_search(space: DesignSpace,
@@ -268,7 +380,10 @@ def portfolio_search(space: DesignSpace, key, *,
                      elite: int = 6, jump_prob: float = 0.15,
                      risk: Optional[RiskConfig] = None,
                      evaluator: Optional[ChunkedEvaluator] = None,
-                     flow: str = "chip-last") -> SearchResult:
+                     flow: str = "chip-last",
+                     checkpoint_dir=None, checkpoint_every: int = 1,
+                     checkpoint_keep: int = 3,
+                     resume: bool = True) -> SearchResult:
     """Evolutionary portfolio search, deterministic in ``key``.
 
     ``risk=RiskConfig(...)`` switches the objective from nominal
@@ -279,6 +394,13 @@ def portfolio_search(space: DesignSpace, key, *,
     device); the trace is retained across generations and across
     same-shaped searches, which ``tests/test_fused.py`` pins via
     ``TRACE_COUNTS['gen_step']``.
+
+    ``checkpoint_dir`` makes the run crash-safe: every
+    ``checkpoint_every`` completed generations the loop state
+    (:class:`SearchState`) is published atomically (retention
+    ``checkpoint_keep``), and — with ``resume=True`` — a rerun pointed
+    at the same directory continues from the newest readable step and
+    returns a **bit-exact** copy of the uninterrupted run's result.
     """
     if elite < 1 or elite > population:
         raise ValueError("need 1 <= elite <= population")
@@ -290,46 +412,42 @@ def portfolio_search(space: DesignSpace, key, *,
     obj = "cost"
     ev_kw: Dict = {}
     n_draws, quantile = 0, 0.5
-    mc_key, sig = key, jnp.zeros((4,), jnp.float32)  # placeholders
     if risk is not None:
         obj = risk.objective_key
-        mc_key = _default_mc_key(key)
-        sig = risk.sigmas.as_array()
         n_draws, quantile = int(risk.n_draws), float(risk.quantile)
-        ev_kw = _mc_kwargs(risk, mc_key)
+        ev_kw = _mc_kwargs(risk, _default_mc_key(key))
 
-    k_init, k_loop = jax.random.split(key)
-    pop = jax.random.randint(k_init, (population,), 0, space.size(),
-                             dtype=jnp.int32)
+    state = SearchState.init(key, population, space.size(), risk)
+    manager = None
+    if checkpoint_dir is not None:
+        manager = CheckpointManager(checkpoint_dir, keep=checkpoint_keep)
+        if resume:
+            restored = SearchState.restore_latest(manager, population)
+            if restored is not None:
+                state = restored
     step = _gen_step()
-    seen: set = set()
-    history: List[Dict] = []
-    best_obj, best_idx = np.inf, -1
-    for gen in range(generations):
+    label_fn = lambda i: space.candidate_at(i).label()  # noqa: E731
+    for gen in range(state.gen, generations):
         with _TRACER.span("generation", gen=gen):
-            k_loop, k_gen = jax.random.split(k_loop)
+            state.k_loop, k_gen = jax.random.split(state.k_loop)
             pop_out, pop_next, gen_idx, gen_obj = step(
-                enc.tables, k_gen, pop, qty, mc_key, sig, meta=enc.meta,
+                enc.tables, k_gen, state.pop, qty, state.mc_key,
+                state.sig, meta=enc.meta,
                 flow=flow, population=population, elite=elite,
                 jump_prob=float(jump_prob), n_draws=n_draws,
                 quantile=quantile)
             # one host sync per generation: priced population + gen best
-            pop_h, gen_idx, gen_obj = jax.device_get(
-                (pop_out, gen_idx, gen_obj))
-        seen.update(int(i) for i in pop_h)
-        if float(gen_obj) < best_obj:
-            best_obj, best_idx = float(gen_obj), int(gen_idx)
-        history.append({
-            "generation": gen,
-            "evaluated": len(seen),
-            "best_objective": best_obj,
-            "best_label": space.candidate_at(best_idx).label(),
-            "gen_best": float(gen_obj)})
-        pop = pop_next
+            host = jax.device_get((pop_out, gen_idx, gen_obj))
+        state.consume(host, label_fn)
+        state.pop = pop_next
+        if manager is not None and checkpoint_every > 0 \
+                and state.gen % checkpoint_every == 0 \
+                and state.gen < generations:
+            state.save(manager)
 
     # materialize every distinct priced candidate through the fused
     # evaluator (same engine graph => identical objectives), rank on host
-    uniq = np.asarray(sorted(seen), np.int64)
+    uniq = np.asarray(sorted(state.seen), np.int64)
     if ev.fused:
         arrays = ev.evaluate_indices(uniq, **ev_kw)
         results = ev.results_from_arrays(arrays)
@@ -338,5 +456,5 @@ def portfolio_search(space: DesignSpace, key, *,
                               **ev_kw)
     ranked = _rank(results, obj)
     return SearchResult(best=ranked[0], ranked=ranked,
-                        pareto=_front(ranked, obj), history=history,
+                        pareto=_front(ranked, obj), history=state.history,
                         n_evaluated=len(results), objective_key=obj)

@@ -22,6 +22,11 @@ stall            sleep ``ms`` inside a tick (drives the watchdog)
 poison           overwrite one priced row with NaN after the host fetch
 flood            force one admission to report queue_full (backpressure)
 recompile        drop the fused jit's executable cache before a dispatch
+crash            simulate process death at a tick boundary: in-flight
+                 futures get typed ``shutting_down`` envelopes, NO journal
+                 terminals are written, and the loop halts — a subsequent
+                 resume must replay the journal (drives chaos/restart
+                 benches; usually ``n=1``)
 ===============  ============================================================
 
 A constructed injector with no rules is **falsy**; every production call
@@ -37,7 +42,8 @@ from typing import Dict, Optional, Tuple
 
 ENV_VAR = "REPRO_FAULTS"
 
-FAULT_KINDS = ("dispatch_error", "stall", "poison", "flood", "recompile")
+FAULT_KINDS = ("dispatch_error", "stall", "poison", "flood", "recompile",
+               "crash")
 
 
 class InjectedFault(RuntimeError):

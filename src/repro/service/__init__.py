@@ -9,22 +9,25 @@ call.  See :mod:`repro.service.server` for the tick loop.
 """
 from .cache import LaneSignature, ResultCache, TraceCache, \
     index_digest, space_fingerprint
-from .metrics import RequestRecord, ResilienceStats, ServiceMetrics
+from .durability import DurabilityConfig, JournalEntry, RequestJournal, \
+    request_from_wire, request_to_wire
+from .metrics import DurabilityStats, RequestRecord, ResilienceStats, \
+    ServiceMetrics
 from .protocol import DEADLINE_EXCEEDED, ErrorInfo, INTERNAL_ERROR, \
     INVALID_REQUEST, \
     McSpec, MCRiskRequest, NUMERICAL_ERROR, PriceRequest, \
-    PriceSystemsRequest, QUEUE_FULL, \
+    PriceSystemsRequest, QUEUE_FULL, SHUTTING_DOWN, \
     RankRequest, RankResult, Request, RequestLog, Response, SearchRequest, \
     SystemsResult, Timing, WhatIfRequest, WhatIfResult, error_response, \
     validate_request
 from .scheduler import Assignment, GenWork, GroupWork, Lane, Scheduler, \
     SpanWork, TickPlan
 from .server import PricingService, SearchTask, SearchWarmup, \
-    ServiceConfig, ServiceError, serve
+    ServiceConfig, ServiceError, SimulatedCrash, serve
 
 __all__ = [
     "DEADLINE_EXCEEDED", "ErrorInfo", "INTERNAL_ERROR", "INVALID_REQUEST",
-    "NUMERICAL_ERROR", "QUEUE_FULL",
+    "NUMERICAL_ERROR", "QUEUE_FULL", "SHUTTING_DOWN",
     "McSpec", "MCRiskRequest", "PriceRequest", "PriceSystemsRequest",
     "RankRequest", "RankResult", "Request", "RequestLog", "Response",
     "SearchRequest", "SystemsResult", "Timing", "WhatIfRequest",
@@ -33,7 +36,9 @@ __all__ = [
     "TickPlan",
     "LaneSignature", "ResultCache", "TraceCache", "index_digest",
     "space_fingerprint",
-    "RequestRecord", "ResilienceStats", "ServiceMetrics",
+    "DurabilityConfig", "JournalEntry", "RequestJournal",
+    "request_from_wire", "request_to_wire",
+    "DurabilityStats", "RequestRecord", "ResilienceStats", "ServiceMetrics",
     "PricingService", "SearchTask", "SearchWarmup", "ServiceConfig",
-    "ServiceError", "serve",
+    "ServiceError", "SimulatedCrash", "serve",
 ]

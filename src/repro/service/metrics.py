@@ -107,6 +107,53 @@ _RESILIENCE_COUNTERS = {
 }
 
 
+# Durability counters: the crash-safety mirror of the resilience block.
+# Journal I/O counters are forwarded by the RequestJournal's stats_hook;
+# the lifecycle counters are bumped by the service directly.
+_DURABILITY_COUNTERS = {
+    "journal_appends": "journal records appended (admit/done/meta)",
+    "journal_fsyncs": "journal fsync barriers issued",
+    "journal_rotations": "journal segment rotations",
+    "journal_replayed": "admitted requests re-admitted from the journal",
+    "checkpoints_written": "search checkpoints published (atomic rename)",
+    "checkpoints_restored": "search lanes restored from a checkpoint",
+    "checkpoint_corrupt_fallbacks":
+        "corrupt checkpoint steps skipped during restore",
+    "checkpoints_removed": "search checkpoint dirs removed on completion",
+    "drain_calls": "stop() invocations that entered the drain path",
+    "drain_timeouts": "drains that hit drain_timeout_s",
+    "drain_rejected": "in-flight requests typed-rejected at drain deadline",
+    "drain_checkpointed": "searches checkpointed at the drain deadline",
+    "crashes": "simulated crashes (REPRO_FAULTS crash kind) enacted",
+}
+
+
+class DurabilityStats:
+    """Crash-safety counters owned by one :class:`PricingService`.
+
+    Same contract as :class:`ResilienceStats`: ``bump(name)`` updates the
+    local field and mirrors ``service_<name>`` into the registry, so
+    ``svc.snapshot()["durability"]`` and a scrape always agree.
+    """
+
+    def __init__(self):
+        self.reset()
+
+    def reset(self):
+        for name in _DURABILITY_COUNTERS:
+            setattr(self, name, 0)
+
+    def bump(self, name: str, n=1):
+        if name not in _DURABILITY_COUNTERS:
+            raise KeyError(f"unknown durability counter {name!r}")
+        setattr(self, name, getattr(self, name) + n)
+        REGISTRY.counter(f"service_{name}",
+                         help=_DURABILITY_COUNTERS[name]).inc(n)
+
+    def snapshot(self) -> Dict:
+        return {name: getattr(self, name) for name in _DURABILITY_COUNTERS}
+
+
 class ResilienceStats:
     """Failure-handling counters owned by one :class:`PricingService`.
 

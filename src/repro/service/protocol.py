@@ -46,6 +46,7 @@ INVALID_REQUEST = "invalid_request"  # failed validation at admission
 INTERNAL_ERROR = "internal"          # tick-time failure, isolated per request
 DEADLINE_EXCEEDED = "deadline_exceeded"  # deadline_ms elapsed before done
 NUMERICAL_ERROR = "numerical_error"  # non-finite cost in this request's rows
+SHUTTING_DOWN = "shutting_down"      # drain deadline hit / service stopping
 
 
 @dataclasses.dataclass(frozen=True)
@@ -226,6 +227,12 @@ class Response:
     # float32 casts of the legacy oracle's float64s (slow-but-correct).
     degraded: bool = False
     degraded_rows: Optional[np.ndarray] = None
+    # Replay provenance: True when this response answers a request that
+    # was re-admitted from the durable journal after a crash/restart.
+    # ``replayed_from`` is the ORIGINAL admission uid (stable across
+    # replay chains), so clients can correlate with pre-crash ids.
+    replayed: bool = False
+    replayed_from: Optional[int] = None
 
     @property
     def latency_s(self) -> float:

@@ -147,6 +147,12 @@ class Scheduler:
         """Remove all queued work of a (failed) request."""
         self.queue = deque(w for w in self.queue if w.owner is not owner)
 
+    def clear(self):
+        """Drop everything (simulated crash / hard shutdown): the queue
+        empties and the whole row budget is released in one stroke."""
+        self.queue.clear()
+        self.pending_rows = 0
+
     def expire(self, now: float) -> List[Any]:
         """Pop and return every queued item whose deadline has passed
         (the caller owes each owner a ``deadline_exceeded`` envelope).

@@ -32,6 +32,8 @@ from __future__ import annotations
 
 import asyncio
 import dataclasses
+import shutil
+import signal
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -39,13 +41,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..checkpoint.store import CheckpointManager
 from ..core.batch import SystemBatch, pad_batch
 from ..core.engine import _TOTAL_JIT
 from ..core.system import System, spec
 from ..dse.evaluate import _CHUNK_JIT, _CHUNK_MC_JIT, ChunkedEvaluator, \
     EvalArrays
-from ..dse.search import SearchResult, _default_mc_key, _front, _gen_step, \
-    _rank
+from ..dse.search import SearchResult, SearchState, _default_mc_key, \
+    _front, _gen_step, _rank
 from ..dse.space import ArchChoice, Candidate, DesignSpace
 from ..obs import jaxhooks
 from ..obs.flight import FlightRecorder
@@ -53,9 +56,11 @@ from ..obs.trace import TRACER as _TRACER
 from ..resilience import CircuitBreaker, FaultInjector, InjectedFault, \
     Watchdog
 from .cache import LaneSignature, ResultCache, TraceCache, space_fingerprint
-from .metrics import RequestRecord, ResilienceStats, ServiceMetrics
+from .durability import DurabilityConfig, RequestJournal, request_to_wire
+from .metrics import DurabilityStats, RequestRecord, ResilienceStats, \
+    ServiceMetrics
 from .protocol import DEADLINE_EXCEEDED, INTERNAL_ERROR, INVALID_REQUEST, \
-    NUMERICAL_ERROR, QUEUE_FULL, McSpec, \
+    NUMERICAL_ERROR, QUEUE_FULL, SHUTTING_DOWN, McSpec, \
     MCRiskRequest, PriceRequest, PriceSystemsRequest, RankRequest, Request, \
     RequestLog, Response, SearchRequest, SystemsResult, Timing, \
     WhatIfRequest, WhatIfResult, RankResult, error_response, \
@@ -70,6 +75,14 @@ class ServiceError(Exception):
     def __init__(self, code: str, message: str):
         super().__init__(message)
         self.code = code
+
+
+class SimulatedCrash(RuntimeError):
+    """Raised by the injected ``crash`` fault kind: the moral equivalent
+    of SIGKILL at a tick boundary — in-flight futures get typed
+    ``shutting_down`` envelopes so test clients unblock, but NO journal
+    terminals are written, so a subsequent :meth:`PricingService.start`
+    must replay the journal exactly as after a real process death."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,6 +121,10 @@ class ServiceConfig:
     breaker_threshold: int = 1         # consecutive failures that open it
     breaker_cooldown_s: float = 2.0    # open -> half_open re-probe delay
     watchdog_timeout_s: Optional[float] = None   # None = no watchdog
+    # -- durability / lifecycle (see README "Durability & restart") --------
+    durability: Optional[DurabilityConfig] = None  # None = no journal
+    drain_timeout_s: Optional[float] = None  # stop(): None = unbounded drain
+    sigterm_drain: bool = False        # SIGTERM -> bounded-drain stop()
 
 
 @dataclasses.dataclass(eq=False)
@@ -133,6 +150,11 @@ class _Active:
     deadline_t: Optional[float] = None       # absolute perf_counter deadline
     degraded: bool = False                   # any row via legacy fallback
     degraded_rows: Optional[np.ndarray] = None   # (n,) provenance mask
+    # Replay provenance: set when this admission re-plays a journaled
+    # request; ``origin`` is the stable id across replay chains (= uid
+    # for fresh admissions) and keys the search checkpoint directory.
+    replayed_from: Optional[int] = None
+    origin: int = 0
 
 
 def _risk_keys(quantiles: Tuple[float, ...]) -> Tuple[str, ...]:
@@ -142,72 +164,66 @@ def _risk_keys(quantiles: Tuple[float, ...]) -> Tuple[str, ...]:
 
 class SearchTask:
     """Device-side state of one evolutionary search, advanced one jitted
-    generation per tick.  The key schedule, generation step, history and
-    final ranking replicate :func:`repro.dse.search.portfolio_search`
-    exactly, so the served result is identical to the direct call."""
+    generation per tick.  The loop state is a
+    :class:`~repro.dse.search.SearchState` — the same carrier
+    ``portfolio_search`` checkpoints — so the key schedule, generation
+    step, history, final ranking, AND checkpoint/restore semantics
+    replicate the direct call exactly: a served (or resumed) search is
+    bit-exact against ``portfolio_search``."""
 
     def __init__(self, svc: "PricingService", active: _Active,
                  sr: SearchRequest):
         self.svc = svc
         self.active = active
         self.sr = sr
-        key = jax.random.PRNGKey(sr.seed)
         self.obj = "cost"
         self.n_draws, self.quantile = 0, 0.5
-        self.mc_key, self.sig = key, jnp.zeros((4,), jnp.float32)
         if sr.risk is not None:
             self.obj = sr.risk.objective_key
-            self.mc_key = _default_mc_key(key)
-            self.sig = sr.risk.sigmas.as_array()
             self.n_draws = int(sr.risk.n_draws)
             self.quantile = float(sr.risk.quantile)
-        k_init, self.k_loop = jax.random.split(key)
-        self.pop = jax.random.randint(k_init, (sr.population,), 0,
-                                      svc.space.size(), dtype=jnp.int32)
-        self.seen: set = set()
-        self.history: List[Dict] = []
-        self.best_obj, self.best_idx = np.inf, -1
-        self.gen = 0
+        self.state = SearchState.init(jax.random.PRNGKey(sr.seed),
+                                      sr.population, svc.space.size(),
+                                      sr.risk)
+
+    @property
+    def gen(self) -> int:
+        return self.state.gen
+
+    @property
+    def mc_key(self):
+        return self.state.mc_key
 
     def device_call(self):
         """Dispatch one generation; returns the arrays to fetch (the
         next population stays on device)."""
-        self.k_loop, k_gen = jax.random.split(self.k_loop)
+        st = self.state
+        st.k_loop, k_gen = jax.random.split(st.k_loop)
         pop_out, pop_next, gen_idx, gen_obj = _gen_step()(
-            self.svc.enc.tables, k_gen, self.pop, self.svc.qty,
-            self.mc_key, self.sig, meta=self.svc.enc.meta,
+            self.svc.enc.tables, k_gen, st.pop, self.svc.qty,
+            st.mc_key, st.sig, meta=self.svc.enc.meta,
             flow=self.sr.flow, population=self.sr.population,
             elite=self.sr.elite, jump_prob=float(self.sr.jump_prob),
             n_draws=self.n_draws, quantile=self.quantile)
-        self.pop = pop_next
+        st.pop = pop_next
         return (pop_out, gen_idx, gen_obj)
 
     def consume(self, host) -> bool:
         """Fold one generation's host results in; True when the
         generation budget is spent (ranking sweep comes next)."""
-        pop_h, gen_idx, gen_obj = host
-        self.seen.update(int(i) for i in pop_h)
-        if float(gen_obj) < self.best_obj:
-            self.best_obj, self.best_idx = float(gen_obj), int(gen_idx)
-        self.history.append({
-            "generation": self.gen,
-            "evaluated": len(self.seen),
-            "best_objective": self.best_obj,
-            "best_label": self.svc.space.candidate_at(
-                self.best_idx).label(),
-            "gen_best": float(gen_obj)})
-        self.gen += 1
-        return self.gen >= self.sr.generations
+        self.state.consume(
+            host, lambda i: self.svc.space.candidate_at(i).label())
+        return self.state.gen >= self.sr.generations
 
     def uniq_indices(self) -> np.ndarray:
-        return np.asarray(sorted(self.seen), np.int64)
+        return np.asarray(sorted(self.state.seen), np.int64)
 
     def finalize(self, arrays: EvalArrays) -> SearchResult:
         results = self.svc.ev.results_from_arrays(arrays)
         ranked = _rank(results, self.obj)
         return SearchResult(best=ranked[0], ranked=ranked,
                             pareto=_front(ranked, self.obj),
-                            history=self.history,
+                            history=self.state.history,
                             n_evaluated=len(results),
                             objective_key=self.obj)
 
@@ -269,6 +285,14 @@ class PricingService:
                          if self.cfg.watchdog_timeout_s else None)
         self._deadline_count = 0       # admitted requests with deadlines
         self._fb_evs: Dict[str, ChunkedEvaluator] = {}   # per-flow legacy
+        # -- durability (repro.service.durability) ----------------------
+        self.dur = DurabilityStats()
+        self.dcfg = self.cfg.durability
+        self.journal: Optional[RequestJournal] = None
+        self._ckpt_mgrs: Dict[int, CheckpointManager] = {}
+        self._accepting = True         # False while draining/crashed
+        self._sigterm_installed = False
+        self.replayed_tasks: List[asyncio.Task] = []
 
     # ------------------------------------------------------------------
     # Failure handling (repro.resilience glue)
@@ -331,6 +355,8 @@ class PricingService:
         self.sched.release(req.cost)
         self.metrics.finish_request(req.rec, ok=False)
         self._active.pop(req.uid, None)
+        if self.journal is not None:
+            self.journal.done(req.uid, "cancelled")
         self.res.bump("cancelled")
         self.log.event(req.uid, "cancelled")
         self.flight.record("request_cancelled", uid=req.uid, kind=req.kind)
@@ -442,18 +468,174 @@ class PricingService:
             self.watchdog.start()
         self._wake = asyncio.Event()
         self._running = True
+        self._accepting = True
+        if self.dcfg is not None and self.journal is None:
+            self.journal = RequestJournal(
+                self.dcfg.journal_dir,
+                fsync_every=self.dcfg.fsync_every,
+                segment_max_records=self.dcfg.segment_max_records,
+                fingerprint=self.fingerprint, stats_hook=self.dur.bump)
+            # uid continuity: new admissions must never collide with
+            # uids still open in the journal from a previous process.
+            self._uid = max(self._uid, self.journal.max_uid)
+        if self.cfg.sigterm_drain:
+            try:
+                asyncio.get_running_loop().add_signal_handler(
+                    signal.SIGTERM, self._on_sigterm)
+                self._sigterm_installed = True
+            except (NotImplementedError, RuntimeError, ValueError):
+                self._sigterm_installed = False
         self._task = asyncio.get_running_loop().create_task(self._run())
+        if self.journal is not None:
+            self._replay_journal()
 
-    async def stop(self):
-        """Drain remaining work, then stop the tick loop."""
+    def _on_sigterm(self):
+        """SIGTERM = graceful shutdown request: bounded drain with the
+        configured ``drain_timeout_s`` (in-flight searches checkpoint at
+        the deadline; unfinished work gets typed ``shutting_down``)."""
+        self.log.event(-1, "sigterm")
+        self.flight.record("sigterm")
+        asyncio.get_running_loop().create_task(self.stop())
+
+    def _replay_journal(self):
+        """Re-admit every journaled request without a terminal record.
+        Each replay admits under a NEW uid (with ``origin`` preserved)
+        *before* the old uid's ``replayed`` terminal is written, so a
+        crash mid-replay can only duplicate work, never lose it."""
+        loop = asyncio.get_running_loop()
+        for e in self.journal.replay():
+            self.dur.bump("journal_replayed")
+            self.log.event(e.uid, "replay", origin=e.origin,
+                           kind=e.request.kind)
+            self.flight.record("request_replayed", uid=e.uid,
+                               origin=e.origin, kind=e.request.kind)
+            self.replayed_tasks.append(loop.create_task(
+                self.submit(e.request, replayed_from=e.origin,
+                            _replaces=e.uid)))
+
+    async def drain_replayed(self) -> List[Response]:
+        """Await every journal-replayed request's response (envelopes,
+        never exceptions)."""
+        if not self.replayed_tasks:
+            return []
+        out = await asyncio.gather(*self.replayed_tasks)
+        return list(out)
+
+    async def stop(self, drain_timeout_s: Optional[float] = None):
+        """Drain remaining work, then stop the tick loop.
+
+        ``drain_timeout_s`` (argument, falling back to
+        ``ServiceConfig.drain_timeout_s``) bounds the drain: admission
+        stops immediately, in-flight work gets the deadline to finish,
+        and at the deadline unfinished searches are checkpointed and
+        every unfinished request is failed with a typed
+        ``shutting_down`` envelope.  ``None`` (the default) preserves
+        the original unbounded drain."""
+        timeout = (drain_timeout_s if drain_timeout_s is not None
+                   else self.cfg.drain_timeout_s)
+        self._accepting = False
         self._running = False
         if self._wake is not None:
             self._wake.set()
         if self._task is not None:
-            await self._task
+            if timeout is None:
+                await self._task
+            else:
+                self.dur.bump("drain_calls")
+                try:
+                    await asyncio.wait_for(asyncio.shield(self._task),
+                                           timeout)
+                except asyncio.TimeoutError:
+                    self.dur.bump("drain_timeouts")
+                    self._drain_abort()
+                    await self._task
             self._task = None
+        if self._sigterm_installed:
+            try:
+                asyncio.get_running_loop().remove_signal_handler(
+                    signal.SIGTERM)
+            except (NotImplementedError, RuntimeError, ValueError):
+                pass
+            self._sigterm_installed = False
+        if self.journal is not None:
+            self.journal.close()
+            self.journal = None
         if self.watchdog is not None:
             self.watchdog.stop()
+
+    def _drain_abort(self):
+        """The drain deadline passed: checkpoint unfinished searches,
+        give every unfinished request a typed ``shutting_down``
+        envelope (journaled as terminal — the client was answered, so
+        the work will NOT replay), drop the queue, dump the flight
+        recorder when ``REPRO_FLIGHT_DIR`` is set."""
+        for req in list(self._active.values()):
+            if req.failed:
+                continue
+            if req.kind == "search" and req.task is not None \
+                    and self.dcfg is not None:
+                try:
+                    req.task.state.save(self._ckpt_manager(req.origin))
+                    self.dur.bump("checkpoints_written")
+                    self.dur.bump("drain_checkpointed")
+                except OSError:
+                    pass
+            self.dur.bump("drain_rejected")
+            self._fail(req, SHUTTING_DOWN,
+                       f"drain deadline passed with "
+                       f"{req.rows_done}/{req.n_rows} rows done")
+        self.sched.clear()
+        self.flight.record("drain_abort")
+        if FlightRecorder.auto_dump_dir() is not None:
+            try:
+                self.dump_flight_recorder()
+            except OSError:
+                pass
+
+    def _ckpt_manager(self, origin: int) -> CheckpointManager:
+        m = self._ckpt_mgrs.get(origin)
+        if m is None:
+            m = CheckpointManager(self.dcfg.checkpoint_dir(origin),
+                                  keep=self.dcfg.checkpoint_keep)
+            self._ckpt_mgrs[origin] = m
+        return m
+
+    def _drop_checkpoints(self, origin: int):
+        """A search finished ok: its checkpoint tree is dead weight."""
+        if self.dcfg is None:
+            return
+        self._ckpt_mgrs.pop(origin, None)
+        d = self.dcfg.checkpoint_dir(origin)
+        if d.exists():
+            shutil.rmtree(d, ignore_errors=True)
+            self.dur.bump("checkpoints_removed")
+
+    def _hard_crash(self):
+        """Enact an injected ``crash`` fault: SIGKILL semantics at a
+        tick boundary.  In-flight futures resolve with typed
+        ``shutting_down`` envelopes (in-process test clients unblock),
+        but — deliberately — NO journal terminals are written and the
+        journal file handle stays untouched: open admits stay open on
+        disk, exactly as after a real process death, and the next
+        :meth:`start` replays them."""
+        self.dur.bump("crashes")
+        self.log.event(-1, "crash")
+        self.flight.record("crash", active=len(self._active))
+        self._running = False
+        self._accepting = False
+        for req in list(self._active.values()):
+            req.failed = True
+            if not req.future.done():
+                resp = error_response(
+                    req.uid, req.kind, SHUTTING_DOWN,
+                    "simulated crash (injected fault)", req.rec.t_submit)
+                resp.replayed = req.replayed_from is not None
+                resp.replayed_from = req.replayed_from
+                req.future.set_result(resp)
+            self.metrics.finish_request(req.rec, ok=False)
+        self._active.clear()
+        self._deadline_count = 0
+        self.sched.clear()
 
     async def _run(self):
         while True:
@@ -481,40 +663,63 @@ class PricingService:
     # Submission
     # ------------------------------------------------------------------
 
+    def _journal_replaced(self, replaces: Optional[int], status: str):
+        """A replayed request reached a terminal outcome at admission
+        time (cache hit / typed rejection): close out the journaled uid
+        it replaces so it does not replay again."""
+        if replaces is not None and self.journal is not None:
+            self.journal.done(replaces, status)
+
     async def submit(self, request: Request,
-                     on_partial: Optional[Callable] = None) -> Response:
+                     on_partial: Optional[Callable] = None, *,
+                     replayed_from: Optional[int] = None,
+                     _replaces: Optional[int] = None) -> Response:
         """Submit one typed request; always returns a Response envelope
         (typed error inside on rejection — never an exception).
 
         ``on_partial(rows_done, n_rows)`` streams coalesced progress as
-        the scheduler ticks through the request."""
+        the scheduler ticks through the request.  ``replayed_from`` /
+        ``_replaces`` are the journal-replay path's internals (see
+        :meth:`_replay_journal`); client code never passes them."""
         self._uid += 1
         uid = self._uid
         t_submit = time.perf_counter()
         self.log.event(uid, "submit", kind=request.kind)
+        if not self._accepting:
+            rec = self.metrics.start_request(request.kind, 0, t_submit)
+            self.metrics.finish_request(rec, ok=False)
+            self.log.event(uid, "rejected", code=SHUTTING_DOWN)
+            self._journal_replaced(_replaces, SHUTTING_DOWN)
+            return error_response(uid, request.kind, SHUTTING_DOWN,
+                                  "service is shutting down", t_submit)
         self._ensure_loop()
         try:
             active, items, cached = self._lower(uid, request, t_submit,
-                                                on_partial)
+                                                on_partial, replayed_from)
         except ServiceError as e:
             rec = self.metrics.start_request(request.kind, 0, t_submit)
             self.metrics.finish_request(rec, ok=False)
             self.log.event(uid, "rejected", code=e.code, message=str(e))
+            self._journal_replaced(_replaces, e.code)
             return error_response(uid, request.kind, e.code, str(e),
                                   t_submit)
         if cached is not None:
             self.metrics.finish_request(active.rec, ok=True, cached=True)
             self.log.event(uid, "cache_hit")
+            self._journal_replaced(_replaces, "ok")
             now = time.perf_counter()
             return Response(request_id=uid, kind=request.kind, ok=True,
                             result=cached, cached=True,
                             timing=Timing(t_submit, now - t_submit,
-                                          now - t_submit))
+                                          now - t_submit),
+                            replayed=replayed_from is not None,
+                            replayed_from=replayed_from)
         flood = self._fire("flood")
         if flood is not None or not self.sched.admit(items, active.cost):
             self.metrics.reject()
             self.metrics.finish_request(active.rec, ok=False)
             self.log.event(uid, "rejected", code=QUEUE_FULL)
+            self._journal_replaced(_replaces, QUEUE_FULL)
             return error_response(
                 uid, request.kind, QUEUE_FULL,
                 "pending row budget exhausted (injected flood)"
@@ -527,6 +732,15 @@ class PricingService:
         self._active[uid] = active
         if active.deadline_t is not None:
             self._deadline_count += 1
+        if self.journal is not None:
+            # the WAL write that makes this admission crash-safe — and
+            # only AFTER it lands does the uid it replaces (if any) get
+            # its "replayed" terminal: a crash between the two
+            # duplicates work, never loses it.
+            self.journal.admit(uid, request_to_wire(request, self.space),
+                               origin=active.origin)
+            if _replaces is not None:
+                self.journal.done(_replaces, "replayed")
         self.log.event(uid, "admitted", rows=active.n_rows)
         if self._wake is not None:
             self._wake.set()
@@ -607,7 +821,8 @@ class PricingService:
                           portfolio_cost=active.accum["pf"], risk=risk)
 
     def _lower(self, uid: int, request: Request, t_submit: float,
-               on_partial) -> Tuple[_Active, List, Optional[object]]:
+               on_partial, replayed_from: Optional[int] = None
+               ) -> Tuple[_Active, List, Optional[object]]:
         kind = getattr(request, "kind", None)
         if kind is None:
             raise ServiceError(INVALID_REQUEST,
@@ -619,7 +834,10 @@ class PricingService:
         fut = asyncio.get_running_loop().create_future()
         active = _Active(uid=uid, kind=kind, request=request,
                          rec=self.metrics.start_request(kind, 0, t_submit),
-                         future=fut, on_partial=on_partial)
+                         future=fut, on_partial=on_partial,
+                         replayed_from=replayed_from,
+                         origin=(replayed_from if replayed_from is not None
+                                 else uid))
         deadline_ms = getattr(request, "deadline_ms", None)
         if deadline_ms is not None:
             active.deadline_t = t_submit + float(deadline_ms) / 1e3
@@ -781,6 +999,26 @@ class PricingService:
         else:
             self._ensure_chunk(sr.flow)
         active.task = SearchTask(self, active, sr)
+        if self.dcfg is not None and active.replayed_from is not None:
+            # replayed search: continue from the newest readable
+            # checkpoint (corrupt steps fall back; an unreadable tree
+            # restarts from generation 0 — still bit-exact, just slower)
+            mgr = self._ckpt_manager(active.origin)
+            before = mgr.corrupt_fallbacks
+            try:
+                restored = SearchState.restore_latest(mgr, sr.population)
+            except ValueError:
+                restored = None
+            if mgr.corrupt_fallbacks > before:
+                self.dur.bump("checkpoint_corrupt_fallbacks",
+                              mgr.corrupt_fallbacks - before)
+            if restored is not None:
+                active.task.state = restored
+                self.dur.bump("checkpoints_restored")
+                self.log.event(active.uid, "search_restored",
+                               origin=active.origin, gen=restored.gen)
+                self.flight.record("search_restored", uid=active.uid,
+                                   origin=active.origin, gen=restored.gen)
         # budget: every generation prices `population` rows, and the final
         # ranking sweep at most everything the generations saw.
         active.cost = sr.population * (sr.generations + 1)
@@ -861,6 +1099,9 @@ class PricingService:
     # ------------------------------------------------------------------
 
     def _tick(self) -> bool:
+        if self.faults and self._fire("crash") is not None:
+            self._hard_crash()
+            return False
         if self._deadline_count:
             now = time.perf_counter()
             for w in self.sched.expire(now):
@@ -1088,6 +1329,12 @@ class PricingService:
         if req.failed:
             return 0
         task = work.task
+        # a restored checkpoint may already have every generation done
+        # (the crash hit between the last generation and the ranking
+        # sweep): go straight to ranking.
+        if task.gen >= task.sr.generations:
+            self._enqueue_search_rank(req)
+            return 0
         # checkpointed abort: a search checks its deadline between
         # generations (queue expiry catches it too once re-pushed, but
         # plan() may have popped this work before the deadline passed).
@@ -1113,6 +1360,15 @@ class PricingService:
             if not req.rec.t_first:
                 req.rec.t_first = time.perf_counter()
             done = task.consume(host)
+            if self.dcfg is not None and not done \
+                    and self.dcfg.checkpoint_every > 0 \
+                    and task.gen % self.dcfg.checkpoint_every == 0:
+                try:
+                    task.state.save(self._ckpt_manager(req.origin))
+                    self.dur.bump("checkpoints_written")
+                except OSError as e:
+                    self.log.event(req.uid, "checkpoint_error",
+                                   error=str(e))
             if req.on_partial is not None:
                 req.on_partial(task.gen, task.sr.generations)
             if done:
@@ -1196,6 +1452,10 @@ class PricingService:
         self.metrics.finish_request(req.rec, ok=True)
         self.sched.release(req.cost)
         self._active.pop(req.uid, None)
+        if self.journal is not None:
+            self.journal.done(req.uid, "ok")
+        if req.kind == "search":
+            self._drop_checkpoints(req.origin)
         self.log.event(req.uid, "done", rows=req.n_rows,
                        degraded=req.degraded)
         self.flight.record("request", uid=req.uid, kind=req.kind,
@@ -1210,7 +1470,9 @@ class PricingService:
                 degraded_rows=(req.degraded_rows
                                if req.degraded
                                and req.kind in ("price", "mc_risk")
-                               else None)))
+                               else None),
+                replayed=req.replayed_from is not None,
+                replayed_from=req.replayed_from))
 
     def _fail(self, req: _Active, code: str, message: str):
         if req.failed:
@@ -1222,12 +1484,19 @@ class PricingService:
         self.sched.release(req.cost)
         self.metrics.finish_request(req.rec, ok=False)
         self._active.pop(req.uid, None)
+        if self.journal is not None:
+            # a typed failure IS an answer: terminal in the journal, so
+            # the request will not replay.
+            self.journal.done(req.uid, code)
         self.log.event(req.uid, "error", code=code, message=message)
         self.flight.record("request_error", uid=req.uid, kind=req.kind,
                            code=code, error=message)
         if not req.future.done():
-            req.future.set_result(error_response(
-                req.uid, req.kind, code, message, req.rec.t_submit))
+            resp = error_response(req.uid, req.kind, code, message,
+                                  req.rec.t_submit)
+            resp.replayed = req.replayed_from is not None
+            resp.replayed_from = req.replayed_from
+            req.future.set_result(resp)
 
     # ------------------------------------------------------------------
     # Observability
@@ -1248,6 +1517,13 @@ class PricingService:
             "deadlines_active": self._deadline_count,
             "watchdog": (self.watchdog.snapshot()
                          if self.watchdog is not None else None),
+        }
+        snap["durability"] = {
+            **self.dur.snapshot(),
+            "enabled": self.dcfg is not None,
+            "accepting": self._accepting,
+            "journal": (self.journal.stats()
+                        if self.journal is not None else None),
         }
         if _TRACER.enabled():
             snap["obs"] = {

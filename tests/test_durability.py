@@ -1,0 +1,585 @@
+"""Crash-safe serving: the durable admission journal (WAL roundtrip,
+torn-tail tolerance, fsync batching, segment rotation + GC), bit-exact
+search checkpoint/resume (dse-level and through the service, zero
+tolerance vs the uninterrupted ``portfolio_search`` oracle), checkpoint
+store hardening (corrupt-step fallback, kill-mid-write atomicity,
+retention-K), the injected ``crash`` fault -> journal replay recovery
+(no admitted request silently lost), and bounded-drain ``stop()``
+semantics with typed ``shutting_down`` envelopes."""
+import asyncio
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import CheckpointManager, latest_step
+from repro.dse import (DesignSpace, RiskConfig, SKU, SearchState,
+                       Uncertainty, portfolio_search)
+from repro.resilience import FAULT_KINDS, FaultInjector
+from repro.service import (DurabilityConfig, McSpec, MCRiskRequest,
+                           PriceRequest, PriceSystemsRequest,
+                           PricingService, RankRequest, RequestJournal,
+                           SHUTTING_DOWN, SearchRequest, ServiceConfig,
+                           WhatIfRequest, request_from_wire,
+                           request_to_wire)
+from repro.service.durability import JournalEntry  # noqa: F401 (export)
+
+
+def _space(**kw):
+    d = dict(skus=(SKU("laptop", 200.0, 2e6), SKU("server", 400.0, 5e5)),
+             processes=("7nm", "12nm"), integrations=("MCM",),
+             chiplet_counts=(1, 2, 4), allow_reuse=True)
+    d.update(kw)
+    return DesignSpace(**d)
+
+
+@pytest.fixture(scope="module")
+def space():
+    return _space()
+
+
+@pytest.fixture(autouse=True)
+def _no_env_faults(monkeypatch):
+    monkeypatch.delenv("REPRO_FAULTS", raising=False)
+
+
+def _cfg(tmp_path, **kw):
+    dcfg = DurabilityConfig(directory=tmp_path / "dur", checkpoint_every=1,
+                            **{k: kw.pop(k) for k in
+                               ("fsync_every", "segment_max_records")
+                               if k in kw})
+    return ServiceConfig(chunk=16, split=4, durability=dcfg, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Wire codec: every request kind roundtrips
+# ---------------------------------------------------------------------------
+
+
+WIRE_CASES = [
+    PriceRequest(indices=[3, 1, 7],
+                 mc=McSpec(draws=32, quantiles=(0.5,), seed=9,
+                           sigmas=Uncertainty(defect_sigma=0.1,
+                                              wafer_cost_sigma=0.2,
+                                              bond_sigma=0.3,
+                                              interposer_sigma=0.4))),
+    RankRequest(indices=None, top_k=5, objective="cost"),
+    MCRiskRequest(indices=[2, 4], mc=McSpec(draws=16), deadline_ms=500.0),
+    WhatIfRequest(base=3, processes=("7nm",), integrations=("MCM",)),
+    SearchRequest(seed=11, population=8, generations=4, elite=2,
+                  risk=RiskConfig(n_draws=16, quantile=0.8)),
+    PriceSystemsRequest(specs=({"kind": "soc", "name": "a", "area": 100.0,
+                                "process": "7nm", "quantity": 1.0},)),
+]
+
+
+@pytest.mark.parametrize("req", WIRE_CASES,
+                         ids=[r.kind for r in WIRE_CASES])
+def test_wire_roundtrip(req):
+    d = request_to_wire(req)
+    assert json.loads(json.dumps(d)) == d          # JSON-safe
+    back = request_from_wire(d)
+    assert back.kind == req.kind
+    assert request_to_wire(back) == d              # stable fixpoint
+
+
+def test_wire_resolves_candidates_to_indices(space):
+    cand = space.candidate_at(5)
+    req = PriceRequest(candidates=(cand,))
+    d = request_to_wire(req, space)
+    assert d["indices"] == [5]
+    assert request_from_wire(d).indices == [5]
+
+
+# ---------------------------------------------------------------------------
+# RequestJournal: WAL semantics
+# ---------------------------------------------------------------------------
+
+
+def _wire(i=0):
+    return request_to_wire(PriceRequest(indices=[i]))
+
+
+def test_journal_replay_roundtrip(tmp_path):
+    j = RequestJournal(tmp_path)
+    j.admit(1, _wire(1))
+    j.admit(2, _wire(2))
+    j.done(1, "ok")
+    j.close()
+    j2 = RequestJournal(tmp_path)
+    entries = j2.replay()
+    assert [e.uid for e in entries] == [2]
+    assert entries[0].origin == 2
+    assert entries[0].request.indices == [2]
+    assert j2.max_uid == 2
+    j2.close()
+
+
+def test_journal_replay_preserves_origin_across_chains(tmp_path):
+    j = RequestJournal(tmp_path)
+    j.admit(1, _wire())
+    j.admit(5, _wire(), origin=1)   # replay of 1 under uid 5
+    j.done(1, "replayed")
+    j.close()
+    j2 = RequestJournal(tmp_path)
+    entries = j2.replay()
+    assert [(e.uid, e.origin) for e in entries] == [(5, 1)]
+    j2.close()
+
+
+def test_journal_torn_tail_ignored(tmp_path):
+    j = RequestJournal(tmp_path)
+    j.admit(1, _wire(1))
+    j.admit(2, _wire(2))
+    j.close()
+    # crash mid-write: the last record is half a line
+    seg = sorted(tmp_path.glob("journal_*.log"))[-1]
+    text = seg.read_text()
+    seg.write_text(text[:-20])
+    j2 = RequestJournal(tmp_path)
+    assert j2.torn_records == 1
+    assert [e.uid for e in j2.replay()] == [1]     # uid 2's record was torn
+    j2.close()
+
+
+def test_journal_fsync_batching(tmp_path):
+    j = RequestJournal(tmp_path, fsync_every=4)
+    for i in range(1, 9):
+        j.admit(i, _wire(i))
+    assert j.appends == 8
+    assert j.fsyncs == 2                           # batches of 4
+    j.sync()
+    assert j.fsyncs == 2                           # nothing pending
+    j.close()
+
+
+def test_journal_rotation_and_gc(tmp_path):
+    # tiny segments: every 2 records rotate; terminal-only segments drop
+    j = RequestJournal(tmp_path, segment_max_records=2)
+    for i in range(1, 7):
+        j.admit(i, _wire(i))
+        j.done(i, "ok")
+    assert j.rotations >= 4
+    assert j.open_count == 0
+    # steady state: GC dropped fully-terminal closed segments
+    assert len(list(tmp_path.glob("journal_*.log"))) <= 2
+    j.close()
+    j2 = RequestJournal(tmp_path)
+    assert j2.replay() == []
+    assert j2.max_uid <= 6
+    j2.close()
+
+
+def test_journal_open_admit_survives_rotation_gc(tmp_path):
+    """The open admit is carried forward on every rotation, so GC of
+    its original segment never loses it — and its done record (written
+    long after the admit's segment rotated away) terminates it for
+    good."""
+    j = RequestJournal(tmp_path, segment_max_records=2)
+    j.admit(1, _wire(1))                           # stays open throughout
+    for i in range(2, 8):
+        j.admit(i, _wire(i))
+        j.done(i, "ok")
+    j.close()
+    j2 = RequestJournal(tmp_path)
+    assert [(e.uid, e.origin) for e in j2.replay()] == [(1, 1)]
+    j2.done(1, "ok")
+    j2.close()
+    j3 = RequestJournal(tmp_path)
+    assert j3.replay() == []
+    j3.close()
+
+
+def test_journal_stats_hook(tmp_path):
+    seen = {}
+    j = RequestJournal(tmp_path, fsync_every=1,
+                       stats_hook=lambda k, n: seen.__setitem__(
+                           k, seen.get(k, 0) + n))
+    j.admit(1, _wire())
+    j.done(1, "ok")
+    j.close()
+    assert seen["journal_appends"] >= 2
+    assert seen["journal_fsyncs"] >= 2
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint store hardening (satellites: corrupt fallback, kill-mid-write,
+# retention-K)
+# ---------------------------------------------------------------------------
+
+
+def _tree(x):
+    return {"a": np.full((4,), x, np.float32)}
+
+
+def test_restore_latest_falls_back_on_corrupt_step(tmp_path):
+    m = CheckpointManager(tmp_path, keep=3)
+    m.save(1, _tree(1.0))
+    m.save(2, _tree(2.0))
+    # bit-rot step 2's arrays: digest check must reject it
+    npz = tmp_path / "step_00000002" / "arrays.npz"
+    npz.write_bytes(npz.read_bytes()[:-7] + b"garbage")
+    step, tree = m.restore_latest(_tree(0.0))
+    assert step == 1
+    assert m.corrupt_fallbacks == 1
+    np.testing.assert_array_equal(tree["a"], _tree(1.0)["a"])
+
+
+def test_restore_latest_raises_when_all_corrupt(tmp_path):
+    m = CheckpointManager(tmp_path, keep=3)
+    m.save(1, _tree(1.0))
+    (tmp_path / "step_00000001" / "arrays.npz").write_bytes(b"junk")
+    with pytest.raises(ValueError, match="no readable checkpoint"):
+        m.restore_latest(_tree(0.0))
+    assert m.corrupt_fallbacks == 1
+
+
+def test_restore_latest_empty_dir(tmp_path):
+    m = CheckpointManager(tmp_path / "nothing", keep=3)
+    assert m.restore_latest(_tree(0.0)) == (None, None)
+
+
+def test_kill_mid_write_atomicity(tmp_path):
+    """Crash between arrays.npz write and the atomic rename: the .tmp
+    dir is invisible to latest_step()/steps() and resume uses the prior
+    published step."""
+    m = CheckpointManager(tmp_path, keep=3)
+    m.save(1, _tree(1.0))
+    # simulate the torn step-2 write: tmp dir with arrays but no rename
+    tmp = tmp_path / "step_00000002.tmp-deadbeef"
+    tmp.mkdir()
+    np.savez(tmp / "arrays.npz", a0=_tree(2.0)["a"])
+    (tmp / "manifest.json").write_text("{}")
+    assert latest_step(tmp_path) == 1
+    assert m.steps() == [1]
+    step, tree = m.restore_latest(_tree(0.0))
+    assert step == 1
+    np.testing.assert_array_equal(tree["a"], _tree(1.0)["a"])
+    # the next save sweeps the orphan
+    m.save(3, _tree(3.0))
+    assert not any(".tmp-" in p.name for p in tmp_path.iterdir())
+
+
+def test_retention_k_eviction(tmp_path):
+    m = CheckpointManager(tmp_path, keep=2)
+    for s in range(1, 6):
+        m.save(s, _tree(float(s)))
+    assert m.steps() == [4, 5]
+    step, tree = m.restore_latest(_tree(0.0))
+    assert step == 5
+
+
+# ---------------------------------------------------------------------------
+# SearchState + portfolio_search checkpoint/resume: bit-exact (zero
+# tolerance) vs the uninterrupted oracle
+# ---------------------------------------------------------------------------
+
+
+def _exact_result_equal(a, b):
+    assert a.history == b.history                  # float-exact dicts
+    assert a.n_evaluated == b.n_evaluated
+    assert a.objective_key == b.objective_key
+    assert [r.label for r in a.ranked] == [r.label for r in b.ranked]
+    assert [r.objective(a.objective_key) for r in a.ranked] == \
+           [r.objective(b.objective_key) for r in b.ranked]
+    assert a.pareto == b.pareto
+
+
+@pytest.mark.parametrize("risk", [None, RiskConfig(n_draws=16,
+                                                   quantile=0.9)],
+                         ids=["nominal", "risk"])
+def test_portfolio_search_resume_bitexact(space, tmp_path, risk):
+    key = jax.random.PRNGKey(7)
+    kw = dict(population=8, generations=6, elite=3, risk=risk)
+    oracle = portfolio_search(space, key, **kw)
+    # interrupted run: stops after 3 generations, checkpointing each
+    portfolio_search(space, key, **{**kw, "generations": 3},
+                     checkpoint_dir=tmp_path, checkpoint_every=1)
+    assert CheckpointManager(tmp_path).steps() != []
+    # resume to the full budget: must be bit-exact vs the oracle
+    resumed = portfolio_search(space, key, **kw, checkpoint_dir=tmp_path,
+                               checkpoint_every=1, resume=True)
+    _exact_result_equal(resumed, oracle)
+
+
+def test_portfolio_search_resume_from_every_generation(space, tmp_path):
+    """Zero tolerance at EVERY interruption point, not just one."""
+    key = jax.random.PRNGKey(3)
+    kw = dict(population=8, generations=5, elite=3)
+    oracle = portfolio_search(space, key, **kw)
+    for stop_at in (2, 3, 4):
+        d = tmp_path / f"stop{stop_at}"
+        portfolio_search(space, key, **{**kw, "generations": stop_at},
+                         checkpoint_dir=d, checkpoint_every=1)
+        assert CheckpointManager(d).steps() != []
+        resumed = portfolio_search(space, key, **kw, checkpoint_dir=d,
+                                   resume=True)
+        _exact_result_equal(resumed, oracle)
+
+
+def test_search_state_roundtrips_through_manager(space, tmp_path):
+    st = SearchState.init(jax.random.PRNGKey(0), 8, space.size(), None)
+    st.seen.update([1, 2, 3])
+    st.history.append({"generation": 0, "evaluated": 3,
+                       "best_objective": 1.5, "best_label": "x",
+                       "gen_best": 1.5})
+    st.best_obj, st.best_idx, st.gen = 1.5, 2, 1
+    m = CheckpointManager(tmp_path, keep=2)
+    st.save(m)
+    back = SearchState.restore_latest(m, 8)
+    assert back.gen == 1 and back.seen == {1, 2, 3}
+    assert back.history == st.history
+    assert back.best_obj == 1.5 and back.best_idx == 2
+    np.testing.assert_array_equal(np.asarray(back.pop), np.asarray(st.pop))
+    np.testing.assert_array_equal(np.asarray(back.k_loop),
+                                  np.asarray(st.k_loop))
+
+
+def test_checkpoint_every_skips_final_generation(space, tmp_path):
+    portfolio_search(space, jax.random.PRNGKey(1), population=8,
+                     generations=4, elite=3, checkpoint_dir=tmp_path,
+                     checkpoint_every=2)
+    assert CheckpointManager(tmp_path).steps() == [2]   # not gen 4
+
+
+# ---------------------------------------------------------------------------
+# Service: crash fault -> journal replay -> bit-exact recovery
+# ---------------------------------------------------------------------------
+
+
+def test_crash_is_a_fault_kind():
+    assert "crash" in FAULT_KINDS
+    inj = FaultInjector("seed=1;crash:p=1.0,n=1")
+    assert inj.fire("crash") is not None
+    assert inj.fire("crash") is None               # n=1 cap
+
+
+def test_service_crash_replay_search_bitexact(space, tmp_path):
+    """The acceptance oracle: a search killed mid-run by the injected
+    crash fault, resumed from journal + checkpoint, returns results
+    bit-exact vs the uninterrupted portfolio_search call — and the
+    journaled request is answered, not lost."""
+    async def main():
+        svc = PricingService(space, _cfg(tmp_path))
+        await svc.start()
+        # seed=1 p=0.3: first crash fire is check 6 (deterministic), so
+        # several generations (and checkpoints) land first.
+        svc.faults = FaultInjector("seed=1;crash:p=0.3,n=1")
+        resp = await svc.submit(SearchRequest(seed=3, population=8,
+                                              generations=10, elite=3))
+        assert not resp.ok and resp.error.code == SHUTTING_DOWN
+        assert svc.snapshot()["durability"]["crashes"] == 1
+        await svc.stop()
+        # restart: journal rescanned from disk, open work replayed
+        svc.faults = FaultInjector("")
+        await svc.start()
+        replayed = await svc.drain_replayed()
+        await svc.stop()
+        assert len(replayed) == 1
+        rr = replayed[0]
+        assert rr.ok and rr.replayed and rr.replayed_from is not None
+        snap = svc.snapshot()["durability"]
+        assert snap["journal_replayed"] == 1
+        assert snap["checkpoints_restored"] == 1
+        assert snap["checkpoints_removed"] >= 1    # cleaned after finish
+        return rr
+
+    rr = asyncio.run(main())
+    oracle = portfolio_search(space, jax.random.PRNGKey(3), population=8,
+                              generations=10, elite=3)
+    _exact_result_equal(rr.result, oracle)
+
+
+def test_service_crash_no_admitted_request_lost(space, tmp_path):
+    """Every journaled request is answered or typed-rejected across the
+    crash: nothing silently disappears."""
+    async def main():
+        svc = PricingService(space, _cfg(tmp_path))
+        await svc.start()
+        ok_resp = await svc.submit(PriceRequest(indices=[1, 5, 9]))
+        assert ok_resp.ok
+        # crash before the pending requests can be served
+        svc.faults = FaultInjector("seed=1;crash:p=1.0,n=1")
+        pending = [
+            svc.submit(PriceRequest(indices=[2, 6])),
+            svc.submit(RankRequest(indices=[0, 1, 2, 3], top_k=2)),
+        ]
+        crashed = await asyncio.gather(*pending)
+        for r in crashed:
+            assert not r.ok and r.error.code == SHUTTING_DOWN
+        # while crashed, new submissions get typed shutting_down
+        r = await svc.submit(PriceRequest(indices=[0]))
+        assert not r.ok and r.error.code == SHUTTING_DOWN
+        await svc.stop()
+        svc.faults = FaultInjector("")
+        await svc.start()
+        replayed = await svc.drain_replayed()
+        await svc.stop()
+        # both journaled-but-unserved requests came back, answered ok
+        assert sorted(r.kind for r in replayed) == ["price", "rank"]
+        for r in replayed:
+            assert r.ok and r.replayed
+        # and the journal is fully terminal: a third start replays nothing
+        j = RequestJournal(svc.dcfg.journal_dir)
+        assert j.replay() == []
+        j.close()
+        return replayed
+
+    replayed = asyncio.run(main())
+    price = next(r for r in replayed if r.kind == "price")
+    assert price.result.idx.tolist() == [2, 6]
+
+
+def test_replay_parity_price_request(space, tmp_path):
+    """A replayed price request prices bit-exactly what the original
+    would have (same indices through the same fused kernels)."""
+    async def main():
+        svc = PricingService(space, _cfg(tmp_path))
+        await svc.start()
+        direct = await svc.submit(PriceRequest(indices=[4, 8]))
+        svc.faults = FaultInjector("seed=1;crash:p=1.0,n=1")
+        r = await svc.submit(PriceRequest(indices=[3, 7, 11]))
+        assert not r.ok
+        await svc.stop()
+        svc.faults = FaultInjector("")
+        await svc.start()
+        (rr,) = await svc.drain_replayed()
+        oracle = await svc.submit(PriceRequest(indices=[3, 7, 11]))
+        await svc.stop()
+        assert rr.ok and rr.replayed
+        np.testing.assert_array_equal(rr.result.portfolio_cost,
+                                      oracle.result.portfolio_cost)
+        assert direct.ok
+    asyncio.run(main())
+
+
+def test_uid_continuity_across_restart(space, tmp_path):
+    """New admissions after a restart never collide with journaled
+    uids (max_uid carries the watermark)."""
+    async def main():
+        svc = PricingService(space, _cfg(tmp_path))
+        await svc.start()
+        svc.faults = FaultInjector("seed=1;crash:p=1.0,n=1")
+        r = await svc.submit(PriceRequest(indices=[1]))
+        crashed_uid = r.request_id
+        await svc.stop()
+        # a FRESH service over the same directory (new process shape)
+        svc2 = PricingService(space, _cfg(tmp_path))
+        await svc2.start()
+        replayed = await svc2.drain_replayed()
+        fresh = await svc2.submit(PriceRequest(indices=[2]))
+        await svc2.stop()
+        assert replayed[0].ok
+        assert fresh.request_id > crashed_uid
+        assert replayed[0].request_id > crashed_uid
+    asyncio.run(main())
+
+
+def test_durability_counters_mirrored_to_registry(space, tmp_path):
+    from repro.obs.registry import REGISTRY
+    async def main():
+        svc = PricingService(space, _cfg(tmp_path))
+        await svc.start()
+        before = REGISTRY.counter("service_journal_appends").get()
+        await svc.submit(PriceRequest(indices=[1]))
+        await svc.stop()
+        snap = svc.snapshot()["durability"]
+        assert snap["journal_appends"] >= 2        # admit + done
+        assert REGISTRY.counter("service_journal_appends").get() > before
+        assert snap["enabled"] and snap["journal"] is None  # closed
+    asyncio.run(main())
+
+
+def test_no_durability_config_means_no_journal(space, tmp_path):
+    async def main():
+        svc = PricingService(space, ServiceConfig(chunk=16, split=4))
+        await svc.start()
+        r = await svc.submit(PriceRequest(indices=[1]))
+        await svc.stop()
+        assert r.ok and not r.replayed
+        snap = svc.snapshot()["durability"]
+        assert not snap["enabled"] and snap["journal_appends"] == 0
+        assert not (tmp_path / "dur").exists()
+    asyncio.run(main())
+
+
+# ---------------------------------------------------------------------------
+# Bounded drain
+# ---------------------------------------------------------------------------
+
+
+def test_drain_timeout_rejects_unfinished_with_typed_envelope(space,
+                                                              tmp_path):
+    """stop(drain_timeout_s=0): in-flight work is checkpointed and gets
+    a typed shutting_down envelope instead of blocking stop forever."""
+    async def main():
+        svc = PricingService(space, _cfg(tmp_path))
+        await svc.start()
+        # a long search that cannot finish instantly
+        fut = asyncio.ensure_future(svc.submit(SearchRequest(
+            seed=5, population=8, generations=2000, elite=3)))
+        # let a couple of generations run
+        for _ in range(20):
+            await asyncio.sleep(0.01)
+            if svc.snapshot()["gen_ticks"] >= 2:
+                break
+        await svc.stop(drain_timeout_s=0.05)
+        resp = await fut
+        assert not resp.ok and resp.error.code == SHUTTING_DOWN
+        snap = svc.snapshot()["durability"]
+        assert snap["drain_calls"] == 1
+        assert snap["drain_timeouts"] == 1
+        assert snap["drain_rejected"] == 1
+        assert snap["drain_checkpointed"] == 1
+        # the drained search left a checkpoint for the operator
+        origin = resp.request_id
+        assert svc.dcfg.checkpoint_dir(origin).exists()
+        # drain rejection is terminal in the journal: no replay
+        j = RequestJournal(svc.dcfg.journal_dir)
+        assert j.replay() == []
+        j.close()
+    asyncio.run(main())
+
+
+def test_stop_default_drains_unbounded(space):
+    """Default stop() preserves the original semantics: every admitted
+    request finishes ok."""
+    async def main():
+        svc = PricingService(space, ServiceConfig(chunk=16, split=4))
+        await svc.start()
+        fut = asyncio.ensure_future(svc.submit(SearchRequest(
+            seed=5, population=8, generations=4, elite=3)))
+        await asyncio.sleep(0)
+        await svc.stop()
+        resp = await fut
+        assert resp.ok
+    asyncio.run(main())
+
+
+def test_submit_after_stop_rejected_shutting_down(space):
+    async def main():
+        svc = PricingService(space, ServiceConfig(chunk=16, split=4))
+        await svc.start()
+        await svc.stop()
+        r = await svc.submit(PriceRequest(indices=[1]))
+        assert not r.ok and r.error.code == SHUTTING_DOWN
+    asyncio.run(main())
+
+
+def test_drain_timeout_config_default(space, tmp_path):
+    """ServiceConfig.drain_timeout_s is the stop() fallback."""
+    async def main():
+        svc = PricingService(space, _cfg(tmp_path, drain_timeout_s=0.05))
+        await svc.start()
+        fut = asyncio.ensure_future(svc.submit(SearchRequest(
+            seed=5, population=8, generations=2000, elite=3)))
+        for _ in range(20):
+            await asyncio.sleep(0.01)
+            if svc.snapshot()["gen_ticks"] >= 1:
+                break
+        await svc.stop()                           # no arg: cfg default
+        resp = await fut
+        assert not resp.ok and resp.error.code == SHUTTING_DOWN
+        assert svc.snapshot()["durability"]["drain_timeouts"] == 1
+    asyncio.run(main())
