@@ -6,22 +6,40 @@ import json
 import os
 import pathlib
 import platform
+import subprocess
 import time
 from typing import Callable, Iterable
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 
+def git_sha() -> str:
+    """Best-effort HEAD SHA of the repo this bench ran from, or
+    ``"unknown"`` outside a git checkout / without a git binary — a
+    stamp must never fail a bench."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=REPO_ROOT,
+            capture_output=True, text=True, timeout=10)
+        sha = out.stdout.strip()
+        if out.returncode == 0 and sha:
+            return sha
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return "unknown"
+
+
 def env_metadata() -> dict:
     """Environment stamp for BENCH_*.json: the facts needed to judge
     whether two runs of the perf trajectory are comparable (JAX version
-    and backend, device kind, host CPU budget, and whether the run was
-    traced — tracing is designed to be near-free but a stamped run never
-    has to argue about it)."""
+    and backend, device kind, host CPU budget, the commit the numbers
+    came from, and whether the run was traced — tracing is designed to
+    be near-free but a stamped run never has to argue about it)."""
     meta = {
         "python": platform.python_version(),
         "platform": platform.platform(),
         "cpu_count": os.cpu_count(),
+        "git_sha": git_sha(),
         "repro_trace": os.environ.get("REPRO_TRACE", ""),
     }
     try:

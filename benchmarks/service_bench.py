@@ -15,7 +15,16 @@ Asserts (acceptance criteria of the service):
     ``ChunkedEvaluator`` rate under >= 8 concurrent clients (the
     continuous-batching overhead bound; skipped under --fast where the
     sample is too small to be stable, which instead enforces a loose p95
-    latency ceiling for CI smoke).
+    latency ceiling for CI smoke);
+  * EVERY answered request carries a trace_id and a closed ledger bill,
+    per-tick bills sum to the measured tick wall within 5% with zero
+    unattributed device ms, and (traced runs) every request's span tree
+    is complete: admission marker + terminal marker, plus a billed tick
+    for every request that reached the device.
+
+``--slo`` additionally enables the declarative SLO tracker
+(latency + availability objectives over a sliding window) and folds its
+error-budget snapshot into BENCH_service.json.
 
 Reports aggregate candidates/s, request latency p50/p95/p99, padded-slot
 waste, and cache/recompile counters, and writes BENCH_service.json for
@@ -70,16 +79,25 @@ def _client_requests(i: int, rng: np.random.Generator, size: int,
     return reqs
 
 
-def run(fast: bool = False, clients: int = 8) -> dict:
+def run(fast: bool = False, clients: int = 8, slo: bool = False) -> dict:
     size = SPACE.size()
     chunk = 64 if fast else 128
     sweep_rows = 256 if fast else 2048
     sweeps = 2 if fast else 4
+    slos = ()
+    if slo:
+        from repro.obs.slo import SLObjective
+        # generous bounds for shared CI boxes: the point of the smoke is
+        # that the tracker runs and snapshots, not that CI hardware is
+        # fast; the real latency assertions below stay authoritative.
+        slos = (SLObjective(kind="*", latency_ms=30_000.0,
+                            latency_target=0.95, availability=0.95,
+                            window_s=300.0),)
     cfg = ServiceConfig(
         chunk=chunk, split=max(8, chunk // 4),
         warm_mc=((64, (0.5, 0.9)),),
         warm_search=(SearchWarmup(population=32, elite=8),),
-        max_pending=10_000_000)
+        max_pending=10_000_000, slos=slos)
 
     # -- single-client fused baseline (the 0.5x yardstick) -----------------
     ev = ChunkedEvaluator(SPACE, candidates_per_chunk=chunk)
@@ -135,8 +153,17 @@ def run(fast: bool = False, clients: int = 8) -> dict:
         "padded_waste_frac": snap["padded_waste_frac"],
         "recompiles_after_warmup": snap["recompiles_after_warmup"],
         "result_cache_hits": snap["result_cache"]["hits"],
+        "ledger_ticks_charged": snap["ledger"]["ticks_charged"],
+        "ledger_device_ms_total": snap["ledger"]["device_ms_total"],
+        "ledger_tick_residual_rel_max":
+            snap["ledger"]["tick_residual_rel_max"],
+        "ledger_unattributed_ms": snap["ledger"]["unattributed_ms"],
+        "ledger_bills_closed": snap["ledger"]["closed"],
+        "ledger_by_kind": snap["ledger"]["by_kind"],
         "fast": fast,
     }
+    if slo:
+        summary["slo"] = snap["slo"]
     if obs.enabled():
         # per-phase breakdown (compile / dispatch / device_get / pack /
         # scatter) rides along only on traced runs, so untraced
@@ -163,6 +190,19 @@ def run(fast: bool = False, clients: int = 8) -> dict:
         "tick loop must sync exactly once per tick"
     assert summary["recompiles_after_warmup"] == 0, \
         f"hot path recompiled {summary['recompiles_after_warmup']}x"
+    # serving-cost ledger: every answered request is billed, and the
+    # bills are a true decomposition of the measured tick wall.
+    unbilled = [r for r in flat if not r.trace_id or r.bill is None
+                or r.bill["status"] == "open"]
+    assert not unbilled, \
+        f"{len(unbilled)} responses lack a trace_id/closed ledger bill"
+    led = snap["ledger"]
+    assert led["open"] == 0, f"{led['open']} bills left open after drain"
+    assert led["tick_residual_rel_max"] <= 0.05, \
+        (f"per-tick bills diverge from measured tick wall by "
+         f"{led['tick_residual_rel_max']:.1%} (need <= 5%)")
+    assert led["unattributed_ms"] == 0.0, \
+        f"{led['unattributed_ms']:.3f} device ms billed to nobody"
     if obs.enabled():
         # traced run: export the Perfetto trace + registry snapshot and
         # hold the tracer to its own acceptance bar — spans must account
@@ -182,8 +222,23 @@ def run(fast: bool = False, clients: int = 8) -> dict:
         assert summary["recompiles_in_ticks"] == 0, \
             (f"tracer attributed {summary['recompiles_in_ticks']} "
              f"jit compiles to warmed ticks")
+        # span-tree completeness: every response's trace_id must resolve
+        # to an admission marker, a terminal marker and — for answers
+        # that reached the device — at least one tick span that billed it.
+        from repro.obs.trace import TRACER
+        for r in flat:
+            tree = TRACER.trace_tree(r.trace_id)
+            names = {ev["name"] for ev in tree}
+            assert "request_admit" in names, \
+                f"trace {r.trace_id}: no admission marker"
+            assert names & {"request_done", "request_error"}, \
+                f"trace {r.trace_id}: no terminal marker"
+            if r.ok and not r.cached:
+                assert "tick" in names, \
+                    f"trace {r.trace_id}: answered on-device without a tick"
         print(f"# service: traced run — {cov:.1%} tick coverage, "
-              f"0 tracer-attributed tick recompiles")
+              f"0 tracer-attributed tick recompiles, "
+              f"{len(flat)} complete span trees")
     if fast:
         # CI smoke: tiny sample, shared boxes — just a sanity ceiling
         assert summary["latency_p95_s"] < 30.0, \
@@ -197,6 +252,9 @@ def run(fast: bool = False, clients: int = 8) -> dict:
           f"({summary['vs_single_client']:.2f}x single-client), "
           f"p95 {summary['latency_p95_s']*1e3:.1f} ms, "
           f"0 hot-path recompiles")
+    print(f"# ledger: {led['closed']} bills over {led['ticks_charged']} "
+          f"ticks, worst tick residual {led['tick_residual_rel_max']:.2e}, "
+          f"unattributed {led['unattributed_ms']:.3f} ms")
     return summary
 
 
@@ -205,8 +263,11 @@ def main():
     ap.add_argument("--fast", action="store_true",
                     help="CI smoke: small sweeps, loose bounds")
     ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--slo", action="store_true",
+                    help="enable the SLO/error-budget tracker and fold "
+                         "its snapshot into BENCH_service.json")
     args = ap.parse_args()
-    run(fast=args.fast, clients=args.clients)
+    run(fast=args.fast, clients=args.clients, slo=args.slo)
 
 
 if __name__ == "__main__":

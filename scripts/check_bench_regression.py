@@ -37,6 +37,9 @@ OK, FAIL, ERROR = 0, 1, 2
 
 # (key, kind, threshold): kind "ratio" compares against min_ratio *
 # baseline[key]; "min"/"max" are machine-independent absolute bounds.
+# Keys may be dotted paths ("a.b.c") into nested JSON objects — the
+# registry snapshot (BENCH_service_metrics.json) nests every instrument
+# as {"kind": ..., "value": ...}.
 RULES = {
     "dse": [
         ("candidates_per_sec", "ratio", None),
@@ -55,6 +58,26 @@ RULES = {
         # in-process (mode-dependent, so not a baseline rule here).
         ("agg_candidates_per_sec", "ratio", None),
         ("recompiles_after_warmup", "max", 0.0),
+        # serving-cost ledger invariants (also asserted in-process by the
+        # bench; pinned here so a silent accounting regression cannot
+        # slip through an artifact-only change)
+        ("ledger_tick_residual_rel_max", "max", 0.05),
+        ("ledger_unattributed_ms", "max", 0.0),
+    ],
+    "service_metrics": [
+        # The registry scrape a traced `service_bench --slo` run writes
+        # (observability-smoke CI job).  Dotted paths: every instrument
+        # snapshots as {"kind": ..., "value"/"count": ...}.
+        ("ledger_bills_closed.value", "min", 1.0),
+        ("ledger_ticks_charged.value", "min", 1.0),
+        ("ledger_request_device_ms.count", "min", 1.0),
+        # per-tick bills must sum to the measured tick wall (float
+        # rounding only) and never bill device time to nobody
+        ("ledger_tick_residual_rel.value", "max", 0.05),
+        ("ledger_unattributed_ms.value", "max", 0.0),
+        # the smoke's generous SLOs must not be burning error budget
+        ("slo_all_latency_burn.value", "max", 1.0),
+        ("slo_all_availability_burn.value", "max", 1.0),
     ],
     "chaos": [
         # Survival invariants of the seeded fault schedule (see
@@ -90,6 +113,20 @@ RULES = {
         ("recovery_s", "max", 300.0),
     ],
 }
+
+
+_MISSING = object()
+
+
+def _lookup(payload: dict, key: str):
+    """Resolve a possibly-dotted ``key`` in nested JSON; ``_MISSING``
+    when any segment is absent or a non-dict is indexed further."""
+    node = payload
+    for part in key.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return _MISSING
+        node = node[part]
+    return node
 
 
 def _load(path: pathlib.Path, name: str, role: str):
@@ -129,24 +166,26 @@ def check(name: str, min_ratio: float, root: pathlib.Path) -> int:
     worst = OK
     failures = []
     for key, kind, bound in RULES[name]:
-        if key not in cur:
+        raw = _lookup(cur, key)
+        if raw is _MISSING:
             print(f"[{name}] FAIL {key} MISSING from the current run "
                   f"(rule {kind}) — did the benchmark finish?")
             failures.append((key, "missing from current run"))
             worst = max(worst, FAIL)
             continue
-        have = float(cur[key])
+        have = float(raw)
         if kind == "ratio":
-            if key not in base:
+            base_raw = _lookup(base, key)
+            if base_raw is _MISSING:
                 print(f"[{name}] FAIL {key} MISSING from baseline "
                       f"— re-commit the baseline")
                 failures.append((key, "missing from baseline"))
                 worst = max(worst, FAIL)
                 continue
-            want = min_ratio * float(base[key])
+            want = min_ratio * float(base_raw)
             good = have >= want
             detail = (f">= {want:,.1f} ({min_ratio:g}x baseline "
-                      f"{float(base[key]):,.1f})")
+                      f"{float(base_raw):,.1f})")
             miss = (f"short by {want - have:,.6g} "
                     f"({have / want:.2%} of the floor)" if not good else "")
         elif kind == "min":

@@ -1,0 +1,353 @@
+"""Render a human-readable observability report for the pricing stack.
+
+  python scripts/obs_report.py [--snapshot svc_snapshot.json]
+                               [--bench BENCH_service.json]
+                               [--metrics BENCH_service_metrics.json]
+                               [--flight BENCH_service_trace.json]
+                               [--trace TRACE_ID]
+                               [--out report.txt] [--prom metrics.prom]
+
+One CLI over every observability artifact the stack writes, offline and
+stdlib-only (CI runs it on uploaded artifacts; no repro import needed):
+
+* ``--snapshot`` — a ``PricingService.snapshot()`` JSON: request /
+  latency / per-lane occupancy plus the serving-cost **ledger** rollup
+  (cost-per-query by request kind, per-lane wall decomposition, the
+  sum-to-tick-wall residual) and the **SLO** error-budget table;
+* ``--bench`` — a ``BENCH_service.json`` from ``benchmarks.service_bench``
+  (same ledger keys, flattened, plus the traced phase table when the run
+  had ``REPRO_TRACE=1``);
+* ``--metrics`` — a metrics-registry snapshot
+  (``REGISTRY.write_json(...)``): every ``ledger_*`` / ``slo_*`` /
+  ``service_*`` instrument, histogram quantiles and trace-id exemplars;
+* ``--flight`` — a flight-recorder / Perfetto ``trace_event`` dump:
+  span-name census and, with ``--trace``, the reconstructed span tree of
+  one request;
+* ``--prom`` — additionally re-render the ``--metrics`` snapshot as
+  Prometheus text exposition (the offline twin of
+  ``REGISTRY.exposition()``) and write it to a file.
+
+Sections for inputs not given are skipped; with no inputs at all the
+report says so and exits 0 (an empty CI artifact is not an error).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from typing import Dict, List, Optional
+
+
+def _load(path: Optional[str], what: str) -> Optional[Dict]:
+    if path is None:
+        return None
+    p = pathlib.Path(path)
+    try:
+        doc = json.loads(p.read_text())
+    except (OSError, UnicodeDecodeError, json.JSONDecodeError) as e:
+        print(f"obs_report: unreadable {what} file {p}: {e}",
+              file=sys.stderr)
+        raise SystemExit(2)
+    if not isinstance(doc, dict):
+        print(f"obs_report: {what} file {p} is not a JSON object",
+              file=sys.stderr)
+        raise SystemExit(2)
+    return doc
+
+
+def _fmt(v) -> str:
+    if isinstance(v, bool):
+        return str(v)
+    if isinstance(v, float):
+        return f"{v:,.4g}"
+    if isinstance(v, int):
+        return f"{v:,}"
+    return str(v)
+
+
+def _table(rows: List[Dict], order: Optional[List[str]] = None) -> List[str]:
+    """Fixed-width text table from a list of flat dicts."""
+    if not rows:
+        return ["  (no rows)"]
+    cols = order or list(rows[0].keys())
+    cells = [[_fmt(r.get(c, "")) for c in cols] for r in rows]
+    widths = [max(len(c), *(len(row[i]) for row in cells))
+              for i, c in enumerate(cols)]
+    out = ["  " + "  ".join(c.ljust(w) for c, w in zip(cols, widths))]
+    for row in cells:
+        out.append("  " + "  ".join(c.rjust(w) for c, w in zip(row, widths)))
+    return out
+
+
+def _section(title: str) -> List[str]:
+    return ["", title, "-" * len(title)]
+
+
+# ---------------------------------------------------------------------------
+# Phase / ledger / SLO renderers (shared by snapshot and bench inputs)
+# ---------------------------------------------------------------------------
+
+def _render_phases(phases: Dict) -> List[str]:
+    out = _section("phase wall breakdown")
+    rows = [{"phase": name, **stats}
+            for name, stats in sorted(phases.items())]
+    return out + _table(rows)
+
+
+def _render_ledger(led: Dict) -> List[str]:
+    out = _section("serving-cost ledger")
+    out.append(f"  bills closed     : {_fmt(led.get('closed', 0))} "
+               f"({_fmt(led.get('open', 0))} still open)")
+    out.append(f"  ticks charged    : {_fmt(led.get('ticks_charged', 0))}")
+    out.append(f"  device ms billed : "
+               f"{_fmt(led.get('device_ms_total', 0.0))}")
+    out.append(f"  worst tick residual (|billed-wall|/wall) : "
+               f"{led.get('tick_residual_rel_max', 0.0):.3e}")
+    out.append(f"  unattributed ms  : "
+               f"{_fmt(led.get('unattributed_ms', 0.0))}")
+    by_kind = led.get("by_kind") or {}
+    if by_kind:
+        out.append("")
+        out.append("  cost per query by request kind:")
+        rows = [{"kind": k, **v} for k, v in sorted(by_kind.items())]
+        out += _table(rows, order=[
+            "kind", "requests", "ok", "errors", "cache_hits", "replayed",
+            "rows_priced", "device_ms", "device_ms_per_query",
+            "dispatch_ms", "padded_ms", "retries", "degraded_rows"])
+    by_lane = led.get("by_lane") or {}
+    if by_lane:
+        out.append("")
+        out.append("  per-lane tick wall decomposition:")
+        rows = [{"lane": k, **v} for k, v in sorted(by_lane.items())]
+        out += _table(rows, order=["lane", "ticks", "wall_ms",
+                                   "rows_priced", "padded_ms",
+                                   "dispatch_ms"])
+    return out
+
+
+def _render_slo(slo: Dict) -> List[str]:
+    out = _section("SLO / error budget")
+    if not slo.get("enabled", False):
+        out.append("  (tracker disabled for this run)")
+        return out
+    rows = []
+    for name, st in sorted((slo.get("objectives") or {}).items()):
+        obj = st.get("objective", {})
+        rows.append({
+            "objective": name,
+            "kind": obj.get("kind", "*"),
+            "latency_ms": obj.get("latency_ms"),
+            "availability": obj.get("availability"),
+            "window_n": st.get("window_n", 0),
+            "latency_burn": st.get("latency_burn", 0.0),
+            "availability_burn": st.get("availability_burn", 0.0),
+            "violations": st.get("latency_violations", 0),
+            "errors": st.get("errors", 0),
+            "burn_events": st.get("burn_events", 0),
+            "burning": st.get("burning", False),
+        })
+    return out + _table(rows)
+
+
+# ---------------------------------------------------------------------------
+# Input-specific sections
+# ---------------------------------------------------------------------------
+
+def render_snapshot(snap: Dict) -> List[str]:
+    out = _section("service snapshot")
+    for key in ("n_requests", "n_done", "n_ok", "n_errors", "n_rejected",
+                "ticks", "rows_priced", "slot_occupancy",
+                "recompiles_after_warmup"):
+        if key in snap:
+            out.append(f"  {key:<24}: {_fmt(snap[key])}")
+    lat = snap.get("latency_s")
+    if lat:
+        out.append(f"  latency p50/p95/p99 (ms) : "
+                   f"{lat['p50'] * 1e3:.2f} / {lat['p95'] * 1e3:.2f} / "
+                   f"{lat['p99'] * 1e3:.2f}")
+    if snap.get("obs", {}).get("phases"):
+        out += _render_phases(snap["obs"]["phases"])
+    if "ledger" in snap:
+        out += _render_ledger(snap["ledger"])
+    if "slo" in snap:
+        out += _render_slo(snap["slo"])
+    return out
+
+
+def render_bench(bench: Dict) -> List[str]:
+    out = _section("benchmark summary")
+    for key in ("clients", "n_requests", "rows_priced",
+                "agg_candidates_per_sec", "vs_single_client",
+                "latency_p95_s", "slot_occupancy",
+                "recompiles_after_warmup", "result_cache_hits",
+                "ledger_ticks_charged", "ledger_device_ms_total",
+                "ledger_tick_residual_rel_max", "ledger_unattributed_ms",
+                "ledger_bills_closed"):
+        if key in bench:
+            out.append(f"  {key:<30}: {_fmt(bench[key])}")
+    env = bench.get("env") or {}
+    if env:
+        out.append(f"  git_sha: {env.get('git_sha', 'unknown')}  "
+                   f"backend: {env.get('backend', '?')}  "
+                   f"traced: {env.get('trace_enabled')}")
+    if bench.get("phases"):
+        out += _render_phases(bench["phases"])
+    if bench.get("ledger_by_kind"):
+        out += _render_ledger({"closed": bench.get("ledger_bills_closed"),
+                               "ticks_charged":
+                                   bench.get("ledger_ticks_charged"),
+                               "device_ms_total":
+                                   bench.get("ledger_device_ms_total"),
+                               "tick_residual_rel_max":
+                                   bench.get("ledger_tick_residual_rel_max",
+                                             0.0),
+                               "unattributed_ms":
+                                   bench.get("ledger_unattributed_ms"),
+                               "by_kind": bench["ledger_by_kind"]})
+    if "slo" in bench:
+        out += _render_slo(bench["slo"])
+    return out
+
+
+def render_metrics(metrics: Dict) -> List[str]:
+    out = _section("metrics registry")
+    groups = {"ledger": [], "slo": [], "service": [], "other": []}
+    for name, row in sorted(metrics.items()):
+        g = ("ledger" if name.startswith("ledger_") else
+             "slo" if name.startswith("slo_") else
+             "service" if name.startswith("service_") else "other")
+        groups[g].append((name, row))
+    for g in ("ledger", "slo", "service", "other"):
+        if not groups[g]:
+            continue
+        out.append(f"  [{g}]")
+        for name, row in groups[g]:
+            if row.get("kind") == "histogram":
+                out.append(
+                    f"    {name:<32} count={_fmt(row.get('count', 0))} "
+                    f"sum={_fmt(row.get('sum', 0.0))} "
+                    f"p50={_fmt(row.get('p50', 0.0))} "
+                    f"p95={_fmt(row.get('p95', 0.0))} "
+                    f"p99={_fmt(row.get('p99', 0.0))}")
+                for ex in row.get("exemplars", []):
+                    out.append(f"      exemplar trace_id={ex['ref']} "
+                               f"value={_fmt(ex['value'])}")
+            else:
+                out.append(f"    {name:<32} {_fmt(row.get('value', 0.0))}")
+    return out
+
+
+def _flight_events(doc: Dict) -> List[Dict]:
+    evs = doc.get("traceEvents", [])
+    return [e for e in evs if isinstance(e, dict)]
+
+
+def render_flight(doc: Dict, trace_id: Optional[str]) -> List[str]:
+    out = _section("flight / trace dump")
+    evs = _flight_events(doc)
+    census: Dict[str, Dict] = {}
+    for e in evs:
+        row = census.setdefault(e.get("name", "?"),
+                                {"events": 0, "wall_ms": 0.0})
+        row["events"] += 1
+        row["wall_ms"] += float(e.get("dur", 0.0)) / 1e3  # us -> ms
+    rows = [{"name": n, **v} for n, v in
+            sorted(census.items(), key=lambda kv: -kv[1]["wall_ms"])]
+    out += _table(rows, order=["name", "events", "wall_ms"])
+    if trace_id:
+        out += _section(f"span tree for trace {trace_id}")
+        mine = []
+        for e in evs:
+            args = e.get("args") or {}
+            ids = args.get("trace_ids") or ()
+            if args.get("trace_id") == trace_id or trace_id in ids:
+                mine.append(e)
+        if not mine:
+            out.append("  (no events carry this trace_id)")
+        for e in sorted(mine, key=lambda e: float(e.get("ts", 0.0))):
+            dur = float(e.get("dur", 0.0)) / 1e3
+            out.append(f"  {float(e.get('ts', 0.0)) / 1e3:>12.3f} ms  "
+                       f"{e.get('name', '?'):<20} "
+                       f"{f'{dur:.3f} ms' if dur else 'instant'}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Prometheus text from a registry snapshot (offline REGISTRY.exposition())
+# ---------------------------------------------------------------------------
+
+def prom_text(metrics: Dict) -> str:
+    """Re-render a registry JSON snapshot in the exact text format
+    ``repro.obs.registry.Registry.exposition`` emits (HELP lines are
+    dropped — snapshots do not carry help strings)."""
+    lines = []
+    for name, row in metrics.items():
+        kind = row.get("kind", "gauge")
+        lines.append(f"# TYPE {name} {kind}")
+        if kind == "histogram":
+            lines.append(f"{name}_count {row.get('count', 0):g}")
+            lines.append(f"{name}_sum {row.get('sum', 0.0):g}")
+            for q in ("p50", "p95", "p99"):
+                lines.append(
+                    f'{name}{{quantile="{q[1:]}"}} {row.get(q, 0.0):g}')
+            for ex in row.get("exemplars", []):
+                lines.append(
+                    f'# EXEMPLAR {name}{{trace_id="{ex["ref"]}"}} '
+                    f'{ex["value"]:g}')
+        else:
+            lines.append(f"{name} {row.get('value', 0.0):g}")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--snapshot", help="PricingService.snapshot() JSON")
+    ap.add_argument("--bench", help="BENCH_service.json from service_bench")
+    ap.add_argument("--metrics", help="registry snapshot JSON "
+                                      "(BENCH_service_metrics.json)")
+    ap.add_argument("--flight", help="flight-recorder / Perfetto "
+                                     "trace_event JSON dump")
+    ap.add_argument("--trace", help="render the span tree of this "
+                                    "trace_id (needs --flight)")
+    ap.add_argument("--out", help="write the report here instead of stdout")
+    ap.add_argument("--prom", help="also write the --metrics snapshot as "
+                                   "Prometheus text exposition")
+    args = ap.parse_args(argv)
+
+    snap = _load(args.snapshot, "snapshot")
+    bench = _load(args.bench, "bench")
+    metrics = _load(args.metrics, "metrics")
+    flight = _load(args.flight, "flight")
+
+    lines = ["observability report"]
+    if snap is not None:
+        lines += render_snapshot(snap)
+    if bench is not None:
+        lines += render_bench(bench)
+    if metrics is not None:
+        lines += render_metrics(metrics)
+    if flight is not None:
+        lines += render_flight(flight, args.trace)
+    if snap is bench is metrics is flight is None:
+        lines.append("(no inputs given — nothing to report)")
+    report = "\n".join(lines) + "\n"
+
+    if args.out:
+        pathlib.Path(args.out).write_text(report)
+        print(f"wrote {args.out}")
+    else:
+        sys.stdout.write(report)
+    if args.prom:
+        if metrics is None:
+            print("obs_report: --prom needs --metrics", file=sys.stderr)
+            return 2
+        pathlib.Path(args.prom).write_text(prom_text(metrics))
+        print(f"wrote {args.prom}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

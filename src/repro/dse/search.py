@@ -140,6 +140,9 @@ class SearchState:
     best_obj: float = np.inf
     best_idx: int = -1
     gen: int = 0                   # completed generations
+    trace_id: str = ""             # request trace id (durable: rides the
+                                   # checkpoint manifest, so a resumed
+                                   # search keeps its original trace)
 
     @classmethod
     def init(cls, key, population: int, size: int,
@@ -182,6 +185,7 @@ class SearchState:
     def extra(self) -> Dict[str, Any]:
         return {"gen": self.gen, "best_obj": float(self.best_obj),
                 "best_idx": int(self.best_idx),
+                "trace_id": self.trace_id,
                 "seen": sorted(int(i) for i in self.seen),
                 "history": list(self.history)}
 
@@ -215,7 +219,8 @@ class SearchState:
                    history=list(extra.get("history", [])),
                    best_obj=float(extra.get("best_obj", np.inf)),
                    best_idx=int(extra.get("best_idx", -1)),
-                   gen=int(extra.get("gen", step)))
+                   gen=int(extra.get("gen", step)),
+                   trace_id=str(extra.get("trace_id", "")))
 
 
 def exhaustive_search(space: DesignSpace,

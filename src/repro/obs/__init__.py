@@ -16,7 +16,14 @@ surfaces, used by engine, DSE, search and service alike:
   attribution of the module-level jit entry points plus a
   ``jax.device_get`` transfer hook;
 * :mod:`repro.obs.flight` — the service's bounded black-box ring,
-  dumped as a trace file on error or on demand.
+  dumped as a trace file on error or on demand;
+* :mod:`repro.obs.ledger` — per-request serving-cost bills: each
+  coalesced tick's measured wall pro-rated to the requests that rode
+  it by rows contributed, rolled up into per-kind/per-lane
+  cost-per-query aggregates (always on; independent of tracing);
+* :mod:`repro.obs.slo` — declarative latency/availability objectives
+  per request kind with sliding-window error-budget burn rates; a burn
+  excursion latches a flight-recorder auto-dump.
 
 Tracing is **off by default and zero-cost when off**; turn it on with
 ``REPRO_TRACE=1`` in the environment or :func:`enable`.  It never adds
@@ -27,13 +34,16 @@ from __future__ import annotations
 
 from . import jaxhooks
 from .flight import FlightRecorder
+from .ledger import Bill, Ledger
 from .registry import (Counter, Gauge, Histogram, REGISTRY, Registry,
                        TraceCounts)
+from .slo import SLObjective, SLOTracker
 from .trace import TRACER, Tracer, span
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "Registry", "REGISTRY", "TraceCounts",
     "Tracer", "TRACER", "span", "FlightRecorder", "jaxhooks",
+    "Bill", "Ledger", "SLObjective", "SLOTracker",
     "enabled", "enable", "disable", "export_chrome", "phase_table",
 ]
 

@@ -168,6 +168,19 @@ def total_compiles() -> int:
     return sum(p.summary()["compiles"] for p in _PROBES)
 
 
+def total_dispatch_s() -> float:
+    """Total probe-attributed jit wall (compile + steady-state dispatch)
+    across every probe.  Deltas of this marker give the measured "device
+    ms inside this tick" the serving-cost ledger pro-rates per request.
+    Only meaningful while tracing is on (probes forward untimed when
+    off); callers fall back to tick wall otherwise."""
+    total = 0.0
+    for p in _PROBES:
+        s = p.summary()
+        total += s["compile_s"] + s["dispatch_s"]
+    return total
+
+
 def recompiles_since(marker: int) -> int:
     """Compiles measured since a ``total_compiles()`` marker — the
     queryable "recompiles after warmup" invariant."""

@@ -74,11 +74,18 @@ class Gauge:
 
 class Histogram:
     """Streaming distribution: count/sum/min/max plus a bounded sample
-    reservoir for quantiles (deterministic decimation, no RNG)."""
+    reservoir for quantiles (deterministic decimation, no RNG).
+
+    Observations may carry an *exemplar* — an opaque reference string
+    (here: a request ``trace_id``) tying the distribution back to a
+    concrete traced request, OpenMetrics-style.  Exemplars live in a
+    small bounded deque (latest wins) so the cost is O(1) per observe.
+    """
 
     kind = "histogram"
 
-    def __init__(self, name: str, help: str = "", max_samples: int = 4096):
+    def __init__(self, name: str, help: str = "", max_samples: int = 4096,
+                 max_exemplars: int = 8):
         self.name = name
         self.help = help
         self.max_samples = int(max_samples)
@@ -88,19 +95,27 @@ class Histogram:
         self.max = -math.inf
         self._samples: List[float] = []
         self._stride = 1
+        self._exemplars: collections.deque = \
+            collections.deque(maxlen=int(max_exemplars))
 
-    def observe(self, v: float):
+    def observe(self, v: float, exemplar: Optional[str] = None):
         v = float(v)
         self.count += 1
         self.sum += v
         self.min = min(self.min, v)
         self.max = max(self.max, v)
+        if exemplar:
+            self._exemplars.append((str(exemplar), v))
         if (self.count - 1) % self._stride == 0:
             self._samples.append(v)
             if len(self._samples) > self.max_samples:
                 # decimate: keep every other sample, double the stride
                 self._samples = self._samples[::2]
                 self._stride *= 2
+
+    def exemplars(self) -> List[Dict[str, float]]:
+        """Recent ``{"ref", "value"}`` exemplar pairs (oldest first)."""
+        return [{"ref": r, "value": v} for r, v in self._exemplars]
 
     def quantile(self, q: float) -> float:
         if not self._samples:
@@ -113,10 +128,15 @@ class Histogram:
         if not self.count:
             return {"count": 0, "sum": 0.0, "min": 0.0, "max": 0.0,
                     "mean": 0.0, "p50": 0.0, "p95": 0.0, "p99": 0.0}
-        return {"count": self.count, "sum": self.sum, "min": self.min,
-                "max": self.max, "mean": self.sum / self.count,
-                "p50": self.quantile(0.50), "p95": self.quantile(0.95),
-                "p99": self.quantile(0.99)}
+        out = {"count": self.count, "sum": self.sum, "min": self.min,
+               "max": self.max, "mean": self.sum / self.count,
+               "p50": self.quantile(0.50), "p95": self.quantile(0.95),
+               "p99": self.quantile(0.99)}
+        # Key is present only when exemplars were attached, so snapshots
+        # from exemplar-free instruments stay byte-identical.
+        if self._exemplars:
+            out["exemplars"] = self.exemplars()
+        return out
 
 
 class Registry:
@@ -184,6 +204,12 @@ class Registry:
                 for q in ("p50", "p95", "p99"):
                     lines.append(
                         f'{name}{{quantile="{q[1:]}"}} {s[q]:g}')
+                # OpenMetrics-flavoured exemplars as comment lines so
+                # classic Prometheus text parsers skip them cleanly.
+                for ex in m.exemplars():
+                    lines.append(
+                        f'# EXEMPLAR {name}{{trace_id="{ex["ref"]}"}} '
+                        f'{ex["value"]:g}')
             else:
                 lines.append(f"{name} {m.get():g}")
         return "\n".join(lines) + "\n"

@@ -173,6 +173,25 @@ class Tracer:
                 child_s += ev["dur_s"]
         return child_s / parent_s if parent_s > 0 else 0.0
 
+    def trace_tree(self, trace_id: str) -> List[Dict]:
+        """Every recorded event belonging to one request's trace.
+
+        A span/instant belongs to trace ``X`` when its labels carry
+        ``trace_id == X`` (request-scoped events: ``request_admit``,
+        ``request_done``, ``admission_compile``, …) or when ``X`` is in
+        its ``trace_ids`` label (shared events: a coalesced ``tick``
+        span lists every request that rode it).  Events come back
+        oldest-first, so admission → ticks → terminal reads in causal
+        order and ``export_chrome`` of the same ring shows the tree.
+        """
+        out = []
+        for ev in self.events():
+            labels = ev["labels"]
+            if labels.get("trace_id") == trace_id or \
+                    trace_id in (labels.get("trace_ids") or ()):
+                out.append(ev)
+        return out
+
     def count(self, name: str, parent: Optional[str] = "__any__") -> int:
         """Number of recorded ``name`` events, optionally restricted to
         those nested under ``parent``."""

@@ -24,6 +24,7 @@ import numpy as np
 
 from ..core.engine import TRACE_COUNTS
 from ..dse.space import DesignSpace
+from ..obs.trace import TRACER
 
 # TRACE_COUNTS keys that indicate device-kernel (re)compilation relevant
 # to the service's lanes.
@@ -153,12 +154,17 @@ class TraceCache:
     def is_warm(self, sig: LaneSignature) -> bool:
         return self.warmed.get(sig, False)
 
-    def ensure(self, sig: LaneSignature, compile_fn) -> bool:
+    def ensure(self, sig: LaneSignature, compile_fn,
+               trace_id: str = "") -> bool:
         """Compile ``sig`` now (admission time) if cold.  Returns True if
-        a compile actually happened."""
+        a compile actually happened.  ``trace_id`` labels the compile
+        span with the request that forced the cold compile, so "why was
+        this admission slow" is answerable from its trace tree."""
         if self.is_warm(sig):
             return False
-        compile_fn()
+        with TRACER.span("admission_compile", kind=sig.kind,
+                         flow=sig.flow, trace_id=trace_id):
+            compile_fn()
         self.warmed[sig] = True
         return True
 

@@ -238,6 +238,7 @@ class JournalEntry:
     origin: int                    # stable id across replay chains
     request: Request
     wire: Dict
+    trace_id: str = ""             # durable trace id (stable across replay)
 
 
 class RequestJournal:
@@ -249,7 +250,7 @@ class RequestJournal:
 
         {"rec": "meta",  "seq": n, "fingerprint": ..., "crc": ...}
         {"rec": "admit", "seq": n, "uid": u, "origin": o,
-         "req": <wire>, "crc": ...}
+         "trace": t, "req": <wire>, "crc": ...}
         {"rec": "done",  "seq": n, "uid": u, "status": "ok"|<code>,
          "crc": ...}
 
@@ -349,7 +350,8 @@ class RequestJournal:
             uid = int(rec["uid"])
             out.append(JournalEntry(uid=uid,
                                     origin=int(rec.get("origin", uid)),
-                                    request=req, wire=rec["req"]))
+                                    request=req, wire=rec["req"],
+                                    trace_id=str(rec.get("trace", ""))))
         return out
 
     @property
@@ -423,7 +425,8 @@ class RequestJournal:
         try:
             for rec in carried:
                 self.admit(int(rec["uid"]), rec["req"],
-                           origin=int(rec.get("origin", rec["uid"])))
+                           origin=int(rec.get("origin", rec["uid"])),
+                           trace_id=str(rec.get("trace", "")))
         finally:
             self._rotating = False
         self.sync()
@@ -441,13 +444,16 @@ class RequestJournal:
 
     # -- the service-facing API ---------------------------------------------
 
-    def admit(self, uid: int, wire: Dict, origin: Optional[int] = None):
+    def admit(self, uid: int, wire: Dict, origin: Optional[int] = None,
+              trace_id: str = ""):
         """Journal one admission (the WAL write that makes the request
         crash-safe).  Must be called before the admission is
-        acknowledged to the client."""
+        acknowledged to the client.  ``trace_id`` rides the record so a
+        replay after a crash reconstructs the SAME request trace."""
         uid = int(uid)
         rec = {"rec": "admit", "uid": uid,
                "origin": int(origin if origin is not None else uid),
+               "trace": str(trace_id),
                "req": wire}
         self._open[uid] = {**rec, "seq": self.seq + 1}
         self._segment_uids[self._segment_no].add(uid)

@@ -40,6 +40,7 @@ class RequestRecord:
     t_done: float = 0.0
     ok: bool = True
     cached: bool = False
+    trace_id: str = ""
 
     @property
     def latency_s(self) -> float:
@@ -202,9 +203,10 @@ class ServiceMetrics:
         self.t_start = time.perf_counter()
 
     # -- request lifecycle ---------------------------------------------------
-    def start_request(self, kind: str, n_rows: int,
-                      t_submit: float) -> RequestRecord:
-        rec = RequestRecord(kind=kind, n_rows=n_rows, t_submit=t_submit)
+    def start_request(self, kind: str, n_rows: int, t_submit: float,
+                      trace_id: str = "") -> RequestRecord:
+        rec = RequestRecord(kind=kind, n_rows=n_rows, t_submit=t_submit,
+                            trace_id=trace_id)
         self.requests.append(rec)
         REGISTRY.counter("service_requests",
                          help="requests submitted").inc()
@@ -227,9 +229,11 @@ class ServiceMetrics:
             REGISTRY.counter("service_errors",
                              help="requests finished not-ok").inc()
         else:
+            # the trace_id exemplar ties the latency distribution back to
+            # concrete traced requests (OpenMetrics-style)
             REGISTRY.histogram("service_latency_s",
                                help="ok-request latency").observe(
-                rec.latency_s)
+                rec.latency_s, exemplar=rec.trace_id or None)
 
     # -- tick accounting -----------------------------------------------------
     def record_tick(self, lane_kind: str, slots: int, used: int,

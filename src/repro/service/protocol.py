@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import logging
+import os
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -47,6 +48,17 @@ INTERNAL_ERROR = "internal"          # tick-time failure, isolated per request
 DEADLINE_EXCEEDED = "deadline_exceeded"  # deadline_ms elapsed before done
 NUMERICAL_ERROR = "numerical_error"  # non-finite cost in this request's rows
 SHUTTING_DOWN = "shutting_down"      # drain deadline hit / service stopping
+
+
+def mint_trace_id() -> str:
+    """Mint a request trace id at admission: 16 hex chars, unique per
+    process for all practical purposes.  The id is *durable* — it rides
+    the journal's wire records and search checkpoints, so the response
+    to a crash-replayed request carries the SAME trace_id the original
+    admission minted, and one id correlates the whole causal chain:
+    admission -> journal -> (crash, replay) -> coalesced ticks ->
+    terminal envelope."""
+    return os.urandom(8).hex()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -233,6 +245,14 @@ class Response:
     # replay chains), so clients can correlate with pre-crash ids.
     replayed: bool = False
     replayed_from: Optional[int] = None
+    # Request-scoped trace id (see mint_trace_id): set on EVERY envelope
+    # the service emits — ok, cached, degraded, replayed, and typed
+    # errors alike — and stable across crash replay.
+    trace_id: str = ""
+    # The request's finalized serving-cost bill (obs.ledger.Bill.as_dict):
+    # pro-rated device ms, rows priced, padded waste, cache/degraded/
+    # replay provenance.  None only when the service ran without a ledger.
+    bill: Optional[Dict] = None
 
     @property
     def latency_s(self) -> float:
@@ -259,13 +279,14 @@ def validate_request(req: Request) -> Optional[str]:
 
 
 def error_response(request_id: int, kind: str, code: str, message: str,
-                   t_submit: float = 0.0) -> Response:
+                   t_submit: float = 0.0, trace_id: str = "") -> Response:
     now = time.perf_counter()
     dt = max(0.0, now - t_submit) if t_submit else 0.0
     return Response(request_id=request_id, kind=kind, ok=False,
                     error=ErrorInfo(code=code, message=message),
                     timing=Timing(submit_s=t_submit, first_result_s=dt,
-                                  done_s=dt))
+                                  done_s=dt),
+                    trace_id=trace_id)
 
 
 # ---------------------------------------------------------------------------

@@ -55,6 +55,7 @@ class SpanWork:                          # membership must not compare arrays
     idx: np.ndarray                # (n,) candidate indices, request order
     cursor: int = 0                # next unscheduled position
     deadline_t: Optional[float] = None   # absolute perf_counter deadline
+    trace_id: str = ""             # the owning request's trace id
 
     @property
     def remaining(self) -> int:
@@ -69,6 +70,7 @@ class GroupWork:
     lane: Lane
     systems: List[Any]             # core.system.System objects
     deadline_t: Optional[float] = None
+    trace_id: str = ""             # the owning request's trace id
 
     @property
     def n_systems(self) -> int:
@@ -84,6 +86,7 @@ class GenWork:
     lane: Lane
     task: Any                      # server.SearchTask
     deadline_t: Optional[float] = None
+    trace_id: str = ""             # the owning request's trace id
 
 
 @dataclasses.dataclass

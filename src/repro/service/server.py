@@ -52,6 +52,8 @@ from ..dse.search import SearchResult, SearchState, _default_mc_key, \
 from ..dse.space import ArchChoice, Candidate, DesignSpace
 from ..obs import jaxhooks
 from ..obs.flight import FlightRecorder
+from ..obs.ledger import Bill, Ledger
+from ..obs.slo import SLObjective, SLOTracker
 from ..obs.trace import TRACER as _TRACER
 from ..resilience import CircuitBreaker, FaultInjector, InjectedFault, \
     Watchdog
@@ -64,7 +66,7 @@ from .protocol import DEADLINE_EXCEEDED, INTERNAL_ERROR, INVALID_REQUEST, \
     MCRiskRequest, PriceRequest, PriceSystemsRequest, RankRequest, Request, \
     RequestLog, Response, SearchRequest, SystemsResult, Timing, \
     WhatIfRequest, WhatIfResult, RankResult, error_response, \
-    validate_request
+    mint_trace_id, validate_request
 from .scheduler import Assignment, GenWork, GroupWork, Lane, Scheduler, \
     SpanWork, TickPlan
 
@@ -125,6 +127,12 @@ class ServiceConfig:
     durability: Optional[DurabilityConfig] = None  # None = no journal
     drain_timeout_s: Optional[float] = None  # stop(): None = unbounded drain
     sigterm_drain: bool = False        # SIGTERM -> bounded-drain stop()
+    # -- SLOs (see README "Observability") ---------------------------------
+    # Declarative latency/availability objectives per request kind; empty
+    # tuple = no SLO tracking (default, zero overhead).  A burn-rate
+    # excursion past an objective's alert threshold records a flight
+    # event and auto-dumps context when REPRO_FLIGHT_DIR is set.
+    slos: Tuple[SLObjective, ...] = ()
 
 
 @dataclasses.dataclass(eq=False)
@@ -155,6 +163,10 @@ class _Active:
     # for fresh admissions) and keys the search checkpoint directory.
     replayed_from: Optional[int] = None
     origin: int = 0
+    # Request-scoped trace id (minted at admission, durable across
+    # crash replay) and the request's open serving-cost bill.
+    trace_id: str = ""
+    bill: Optional[Bill] = None
 
 
 def _risk_keys(quantiles: Tuple[float, ...]) -> Tuple[str, ...]:
@@ -185,6 +197,9 @@ class SearchTask:
         self.state = SearchState.init(jax.random.PRNGKey(sr.seed),
                                       sr.population, svc.space.size(),
                                       sr.risk)
+        # the trace id rides the checkpoint manifest, so a resumed
+        # search continues the SAME request trace
+        self.state.trace_id = active.trace_id
 
     @property
     def gen(self) -> int:
@@ -285,6 +300,16 @@ class PricingService:
                          if self.cfg.watchdog_timeout_s else None)
         self._deadline_count = 0       # admitted requests with deadlines
         self._fb_evs: Dict[str, ChunkedEvaluator] = {}   # per-flow legacy
+        # -- serving-cost ledger + SLO tracking (repro.obs) --------------
+        self.ledger = Ledger()
+        self.slo: Optional[SLOTracker] = (
+            SLOTracker(self.cfg.slos, on_burn=self._on_slo_burn)
+            if self.cfg.slos else None)
+        # completions found during a tick are deferred until after the
+        # tick's wall is measured and billed, so a finishing request's
+        # bill includes its final tick's share (see _tick)
+        self._tick_done: List[Callable] = []
+        self._raw_parts: Optional[List[GroupWork]] = None
         # -- durability (repro.service.durability) ----------------------
         self.dur = DurabilityStats()
         self.dcfg = self.cfg.durability
@@ -315,6 +340,22 @@ class PricingService:
         self.flight.record("breaker", transition=event,
                            state=self.breaker.state)
 
+    def _on_slo_burn(self, kind: str, dimension: str, burn: float,
+                     trace_id: str):
+        """An error-budget burn rate crossed its alert threshold (latched
+        once per excursion by the tracker): record the event with the
+        offending trace id and auto-dump the flight recorder so the
+        context around the burn is preserved."""
+        self.log.event(-1, "slo_burn", kind=kind, dimension=dimension,
+                       burn=round(burn, 3), trace_id=trace_id)
+        self.flight.record("slo_burn", kind=kind, dimension=dimension,
+                           burn=burn, trace_id=trace_id)
+        if FlightRecorder.auto_dump_dir() is not None:
+            try:
+                self.dump_flight_recorder()
+            except OSError:
+                pass                  # never let a dump break serving
+
     def _on_stall(self, elapsed: float):
         """Watchdog callback — runs on the watchdog thread, so: evidence
         only (counter bumps are GIL-atomic, the flight ring is append-
@@ -342,6 +383,25 @@ class PricingService:
             self.flight.record("loop_restart")
             self._task = asyncio.get_running_loop().create_task(self._run())
 
+    def _close_bill(self, req: _Active, ok: bool, status: str,
+                    cache_hit: bool = False,
+                    observe_slo: bool = True) -> Optional[Dict]:
+        """Finalize a request's cost bill and feed the SLO tracker —
+        the one terminal-accounting path every outcome goes through.
+        Returns the bill as a JSON-ready dict for the response envelope.
+        """
+        degraded = 0
+        if isinstance(req.degraded_rows, np.ndarray):
+            degraded = int(req.degraded_rows.sum())
+        if req.bill is not None:
+            self.ledger.close(req.bill, status=status, cache_hit=cache_hit,
+                              degraded_rows=degraded,
+                              latency_s=req.rec.latency_s)
+        if self.slo is not None and observe_slo:
+            self.slo.observe(req.kind, req.rec.latency_s, ok,
+                             trace_id=req.trace_id)
+        return req.bill.as_dict() if req.bill is not None else None
+
     def _cancel(self, req: _Active):
         """Client abandoned an admitted request (awaiter cancelled):
         drop its queued work, release its row budget, count it.  No
@@ -354,12 +414,17 @@ class PricingService:
         self.sched.drop_owned_by(req)
         self.sched.release(req.cost)
         self.metrics.finish_request(req.rec, ok=False)
+        # a cancellation is the client's doing, not the service's: close
+        # the bill but keep it out of the availability error budget
+        self._close_bill(req, ok=False, status="cancelled",
+                         observe_slo=False)
         self._active.pop(req.uid, None)
         if self.journal is not None:
             self.journal.done(req.uid, "cancelled")
         self.res.bump("cancelled")
         self.log.event(req.uid, "cancelled")
-        self.flight.record("request_cancelled", uid=req.uid, kind=req.kind)
+        self.flight.record("request_cancelled", uid=req.uid, kind=req.kind,
+                           trace_id=req.trace_id)
 
     def _fallback_evaluator(self, flow: str) -> ChunkedEvaluator:
         """The legacy host-packing evaluator degraded ticks price
@@ -391,11 +456,12 @@ class PricingService:
                 self._ensure_gen(flow, w)
         self.warmed = True
 
-    def _ensure_chunk(self, flow: str):
+    def _ensure_chunk(self, flow: str, trace_id: str = ""):
         sig = LaneSignature("chunk", flow)
         dev0 = jnp.zeros((self.cfg.chunk,), jnp.int32)
         self.traces.ensure(sig, lambda: jax.device_get(_CHUNK_JIT(
-            self.enc.tables, dev0, self.qty, meta=self.enc.meta, flow=flow)))
+            self.enc.tables, dev0, self.qty, meta=self.enc.meta,
+            flow=flow)), trace_id=trace_id)
         if self.cfg.fallback:
             # warm the degraded path's engine trace too, so a tick that
             # falls back never compiles mid-tick (the fallback always
@@ -406,14 +472,16 @@ class PricingService:
                 lambda: self._fallback_evaluator(flow)
                 .evaluate_indices_legacy(idx0))
 
-    def _ensure_mc(self, flow: str, draws: int, quantiles: Tuple[float, ...]):
+    def _ensure_mc(self, flow: str, draws: int, quantiles: Tuple[float, ...],
+                   trace_id: str = ""):
         sig = LaneSignature("mc", flow, (draws, quantiles))
         dev0 = jnp.zeros((self.cfg.chunk,), jnp.int32)
         key0 = jax.random.PRNGKey(0)
         sig0 = jnp.zeros((4,), jnp.float32)
         self.traces.ensure(sig, lambda: jax.device_get(_CHUNK_MC_JIT(
             self.enc.tables, dev0, self.qty, key0, sig0, meta=self.enc.meta,
-            flow=flow, n_draws=draws, quantiles=quantiles)))
+            flow=flow, n_draws=draws, quantiles=quantiles)),
+            trace_id=trace_id)
         if self.cfg.fallback:
             # sigmas are traced (not signature components) — warming
             # with the defaults covers every sigma set at this shape.
@@ -425,7 +493,7 @@ class PricingService:
                                          mc_draws=draws,
                                          mc_quantiles=quantiles))
 
-    def _ensure_gen(self, flow: str, w: SearchWarmup):
+    def _ensure_gen(self, flow: str, w: SearchWarmup, trace_id: str = ""):
         sig = LaneSignature("gen", flow, (w.population, w.elite,
                                           float(w.jump_prob), w.n_draws,
                                           float(w.quantile)))
@@ -441,9 +509,9 @@ class PricingService:
             jnp.zeros((4,), jnp.float32), meta=self.enc.meta, flow=flow,
             population=w.population, elite=w.elite,
             jump_prob=float(w.jump_prob), n_draws=w.n_draws,
-            quantile=float(w.quantile))[2:]))
+            quantile=float(w.quantile))[2:]), trace_id=trace_id)
 
-    def _ensure_raw(self, flow: str):
+    def _ensure_raw(self, flow: str, trace_id: str = ""):
         sig = LaneSignature("raw", flow)
 
         def compile_raw():
@@ -453,7 +521,7 @@ class PricingService:
                                          max_chips=self.raw_max_chips)
             jax.device_get(_TOTAL_JIT(pad_batch(b, **self.raw_pad), flow))
 
-        self.traces.ensure(sig, compile_raw)
+        self.traces.ensure(sig, compile_raw, trace_id=trace_id)
 
     # ------------------------------------------------------------------
     # Lifecycle
@@ -511,7 +579,8 @@ class PricingService:
                                origin=e.origin, kind=e.request.kind)
             self.replayed_tasks.append(loop.create_task(
                 self.submit(e.request, replayed_from=e.origin,
-                            _replaces=e.uid)))
+                            _replaces=e.uid,
+                            _trace_id=(e.trace_id or None))))
 
     async def drain_replayed(self) -> List[Response]:
         """Await every journal-replayed request's response (envelopes,
@@ -625,14 +694,19 @@ class PricingService:
         self._accepting = False
         for req in list(self._active.values()):
             req.failed = True
+            self.metrics.finish_request(req.rec, ok=False)
+            bill_dict = self._close_bill(req, ok=False,
+                                         status=SHUTTING_DOWN,
+                                         observe_slo=False)
             if not req.future.done():
                 resp = error_response(
                     req.uid, req.kind, SHUTTING_DOWN,
-                    "simulated crash (injected fault)", req.rec.t_submit)
+                    "simulated crash (injected fault)", req.rec.t_submit,
+                    trace_id=req.trace_id)
                 resp.replayed = req.replayed_from is not None
                 resp.replayed_from = req.replayed_from
+                resp.bill = bill_dict
                 req.future.set_result(resp)
-            self.metrics.finish_request(req.rec, ok=False)
         self._active.clear()
         self._deadline_count = 0
         self.sched.clear()
@@ -670,41 +744,76 @@ class PricingService:
         if replaces is not None and self.journal is not None:
             self.journal.done(replaces, status)
 
+    def _reject(self, uid: int, request: Request, t_submit: float,
+                trace_id: str, code: str, message: str,
+                replayed_from: Optional[int] = None,
+                rec=None, bill: Optional[Bill] = None) -> Response:
+        """Admission-time typed rejection: every rejection still gets a
+        trace_id, a closed ledger bill and an SLO availability sample —
+        rejected work is spent error budget, not a blind spot."""
+        if rec is None:
+            rec = self.metrics.start_request(request.kind, 0, t_submit,
+                                             trace_id=trace_id)
+        if bill is None:
+            bill = self.ledger.open(trace_id, uid, request.kind,
+                                    replayed=replayed_from is not None)
+        self.metrics.finish_request(rec, ok=False)
+        self.ledger.close(bill, status=code, latency_s=rec.latency_s)
+        if self.slo is not None:
+            self.slo.observe(request.kind, rec.latency_s, False,
+                             trace_id=trace_id)
+        _TRACER.instant("request_error", trace_id=trace_id, uid=uid,
+                        kind=request.kind, code=code)
+        self.log.event(uid, "rejected", code=code, message=message)
+        resp = error_response(uid, request.kind, code, message, t_submit,
+                              trace_id=trace_id)
+        resp.bill = bill.as_dict()
+        return resp
+
     async def submit(self, request: Request,
                      on_partial: Optional[Callable] = None, *,
                      replayed_from: Optional[int] = None,
-                     _replaces: Optional[int] = None) -> Response:
+                     _replaces: Optional[int] = None,
+                     _trace_id: Optional[str] = None) -> Response:
         """Submit one typed request; always returns a Response envelope
         (typed error inside on rejection — never an exception).
 
         ``on_partial(rows_done, n_rows)`` streams coalesced progress as
         the scheduler ticks through the request.  ``replayed_from`` /
-        ``_replaces`` are the journal-replay path's internals (see
-        :meth:`_replay_journal`); client code never passes them."""
+        ``_replaces`` / ``_trace_id`` are the journal-replay path's
+        internals (see :meth:`_replay_journal`); client code never
+        passes them."""
         self._uid += 1
         uid = self._uid
+        # the request-scoped correlation id: minted here at admission,
+        # preserved verbatim across journal replay so one logical request
+        # keeps ONE trace across process restarts.
+        trace_id = _trace_id or mint_trace_id()
         t_submit = time.perf_counter()
-        self.log.event(uid, "submit", kind=request.kind)
+        self.log.event(uid, "submit", kind=request.kind,
+                       trace_id=trace_id)
+        _TRACER.instant("request_admit", trace_id=trace_id, uid=uid,
+                        kind=request.kind)
         if not self._accepting:
-            rec = self.metrics.start_request(request.kind, 0, t_submit)
-            self.metrics.finish_request(rec, ok=False)
-            self.log.event(uid, "rejected", code=SHUTTING_DOWN)
             self._journal_replaced(_replaces, SHUTTING_DOWN)
-            return error_response(uid, request.kind, SHUTTING_DOWN,
-                                  "service is shutting down", t_submit)
+            return self._reject(uid, request, t_submit, trace_id,
+                                SHUTTING_DOWN, "service is shutting down",
+                                replayed_from)
         self._ensure_loop()
         try:
             active, items, cached = self._lower(uid, request, t_submit,
-                                                on_partial, replayed_from)
+                                                on_partial, replayed_from,
+                                                trace_id)
         except ServiceError as e:
-            rec = self.metrics.start_request(request.kind, 0, t_submit)
-            self.metrics.finish_request(rec, ok=False)
-            self.log.event(uid, "rejected", code=e.code, message=str(e))
             self._journal_replaced(_replaces, e.code)
-            return error_response(uid, request.kind, e.code, str(e),
-                                  t_submit)
+            return self._reject(uid, request, t_submit, trace_id,
+                                e.code, str(e), replayed_from)
         if cached is not None:
             self.metrics.finish_request(active.rec, ok=True, cached=True)
+            bill_dict = self._close_bill(active, ok=True, status="ok",
+                                         cache_hit=True)
+            _TRACER.instant("request_done", trace_id=trace_id, uid=uid,
+                            kind=request.kind, cached=True)
             self.log.event(uid, "cache_hit")
             self._journal_replaced(_replaces, "ok")
             now = time.perf_counter()
@@ -713,22 +822,23 @@ class PricingService:
                             timing=Timing(t_submit, now - t_submit,
                                           now - t_submit),
                             replayed=replayed_from is not None,
-                            replayed_from=replayed_from)
+                            replayed_from=replayed_from,
+                            trace_id=trace_id, bill=bill_dict)
         flood = self._fire("flood")
         if flood is not None or not self.sched.admit(items, active.cost):
             self.metrics.reject()
-            self.metrics.finish_request(active.rec, ok=False)
-            self.log.event(uid, "rejected", code=QUEUE_FULL)
             self._journal_replaced(_replaces, QUEUE_FULL)
-            return error_response(
-                uid, request.kind, QUEUE_FULL,
+            return self._reject(
+                uid, request, t_submit, trace_id, QUEUE_FULL,
                 "pending row budget exhausted (injected flood)"
                 if flood is not None else
                 f"pending row budget exhausted "
                 f"({self.sched.pending_rows}/{self.sched.max_pending} used, "
-                f"request needs {active.cost})", t_submit)
+                f"request needs {active.cost})",
+                replayed_from, rec=active.rec, bill=active.bill)
         for it in items:
             it.deadline_t = active.deadline_t
+            it.trace_id = trace_id
         self._active[uid] = active
         if active.deadline_t is not None:
             self._deadline_count += 1
@@ -738,7 +848,7 @@ class PricingService:
             # its "replayed" terminal: a crash between the two
             # duplicates work, never loses it.
             self.journal.admit(uid, request_to_wire(request, self.space),
-                               origin=active.origin)
+                               origin=active.origin, trace_id=trace_id)
             if _replaces is not None:
                 self.journal.done(_replaces, "replayed")
         self.log.event(uid, "admitted", rows=active.n_rows)
@@ -754,10 +864,12 @@ class PricingService:
     # Lowering: request -> lane + work items + finalizers
     # ------------------------------------------------------------------
 
-    def _mc_lane(self, flow: str, mc: McSpec, key) -> Lane:
+    def _mc_lane(self, flow: str, mc: McSpec, key,
+                 trace_id: str = "") -> Lane:
         quantiles = tuple(float(q) for q in mc.quantiles)
         draws = int(mc.draws)
-        self._ensure_mc(flow, draws, quantiles)    # admission-time compile
+        # admission-time compile (span labelled with the forcing request)
+        self._ensure_mc(flow, draws, quantiles, trace_id=trace_id)
         key_t = tuple(int(x) for x in np.asarray(key).ravel())
         sig_t = (mc.sigmas.defect_sigma, mc.sigmas.wafer_cost_sigma,
                  mc.sigmas.bond_sigma, mc.sigmas.interposer_sigma)
@@ -821,7 +933,8 @@ class PricingService:
                           portfolio_cost=active.accum["pf"], risk=risk)
 
     def _lower(self, uid: int, request: Request, t_submit: float,
-               on_partial, replayed_from: Optional[int] = None
+               on_partial, replayed_from: Optional[int] = None,
+               trace_id: str = ""
                ) -> Tuple[_Active, List, Optional[object]]:
         kind = getattr(request, "kind", None)
         if kind is None:
@@ -833,11 +946,15 @@ class PricingService:
         self._check_flow(request.flow)
         fut = asyncio.get_running_loop().create_future()
         active = _Active(uid=uid, kind=kind, request=request,
-                         rec=self.metrics.start_request(kind, 0, t_submit),
+                         rec=self.metrics.start_request(kind, 0, t_submit,
+                                                        trace_id=trace_id),
                          future=fut, on_partial=on_partial,
                          replayed_from=replayed_from,
                          origin=(replayed_from if replayed_from is not None
                                  else uid))
+        active.trace_id = trace_id
+        active.bill = self.ledger.open(trace_id, uid, kind,
+                                       replayed=replayed_from is not None)
         deadline_ms = getattr(request, "deadline_ms", None)
         if deadline_ms is not None:
             active.deadline_t = t_submit + float(deadline_ms) / 1e3
@@ -862,10 +979,11 @@ class PricingService:
         quantiles = None
         if mc is not None:
             lane = self._mc_lane(request.flow,  mc,
-                                 jax.random.PRNGKey(mc.seed))
+                                 jax.random.PRNGKey(mc.seed),
+                                 trace_id=trace_id)
             quantiles = tuple(float(q) for q in mc.quantiles)
         else:
-            self._ensure_chunk(request.flow)
+            self._ensure_chunk(request.flow, trace_id=trace_id)
             lane = Lane(kind="chunk", flow=request.flow)
 
         objective = "cost"
@@ -992,12 +1110,13 @@ class PricingService:
         self._ensure_gen(sr.flow, SearchWarmup(
             population=sr.population, elite=sr.elite,
             jump_prob=float(sr.jump_prob), n_draws=n_draws,
-            quantile=quantile))
+            quantile=quantile), trace_id=active.trace_id)
         # the ranking sweep reuses the chunk/mc lane — make sure it's warm
         if sr.risk is not None:
-            self._ensure_mc(sr.flow, n_draws, (0.5, quantile))
+            self._ensure_mc(sr.flow, n_draws, (0.5, quantile),
+                            trace_id=active.trace_id)
         else:
-            self._ensure_chunk(sr.flow)
+            self._ensure_chunk(sr.flow, trace_id=active.trace_id)
         active.task = SearchTask(self, active, sr)
         if self.dcfg is not None and active.replayed_from is not None:
             # replayed search: continue from the newest readable
@@ -1013,6 +1132,9 @@ class PricingService:
                 self.dur.bump("checkpoint_corrupt_fallbacks",
                               mgr.corrupt_fallbacks - before)
             if restored is not None:
+                if not restored.trace_id:
+                    # pre-tracing checkpoint: adopt the replayed trace
+                    restored.trace_id = active.trace_id
                 active.task.state = restored
                 self.dur.bump("checkpoints_restored")
                 self.log.event(active.uid, "search_restored",
@@ -1038,7 +1160,8 @@ class PricingService:
             quantiles = (0.5, float(sr.risk.quantile))
             mc = McSpec(draws=int(sr.risk.n_draws), quantiles=quantiles,
                         seed=0, sigmas=sr.risk.sigmas)
-            lane = self._mc_lane(sr.flow, mc, task.mc_key)
+            lane = self._mc_lane(sr.flow, mc, task.mc_key,
+                                 trace_id=active.trace_id)
         else:
             quantiles = None
             lane = Lane(kind="chunk", flow=sr.flow)
@@ -1046,7 +1169,8 @@ class PricingService:
         active.cost = sr.population * (sr.generations + 1)  # unchanged
         active.payload_fn = task.finalize
         self.sched.push(SpanWork(owner=active, lane=lane, idx=uniq,
-                                 deadline_t=active.deadline_t))
+                                 deadline_t=active.deadline_t,
+                                 trace_id=active.trace_id))
 
     # -- raw spec lane ------------------------------------------------------
     def _lower_systems(self, active: _Active, req: PriceSystemsRequest):
@@ -1075,7 +1199,7 @@ class PricingService:
                 raise ValueError("group exceeds the raw lane entity budget")
         except (ValueError, KeyError, TypeError) as e:
             raise ServiceError(INVALID_REQUEST, str(e)) from None
-        self._ensure_raw(req.flow)
+        self._ensure_raw(req.flow, trace_id=active.trace_id)
         active.n_rows = len(systems)
         active.cost = len(systems)
         active.rec.n_rows = len(systems)
@@ -1116,12 +1240,28 @@ class PricingService:
         plan = self.sched.plan()
         if plan is None:
             return False
+        # terminal completions discovered during the tick are DEFERRED to
+        # after the wall clock stops and the ledger charges the tick, so
+        # a finishing request's bill includes its final tick's share.
+        self._tick_done = []
+        self._raw_parts = None
+        span_labels: Dict[str, object] = {"lane": plan.lane.kind}
+        if _TRACER.enabled():
+            tids, seen = [], set()
+            for owner in self._owners(plan):
+                if owner.trace_id and owner.trace_id not in seen:
+                    seen.add(owner.trace_id)
+                    tids.append(owner.trace_id)
+            span_labels["trace_ids"] = tids
         t0 = time.perf_counter()
         before = self.traces.counts()
+        retries_before = self.res.retries
+        dispatch_before = (jaxhooks.total_dispatch_s()
+                           if _TRACER.enabled() else 0.0)
         if self.watchdog is not None:
             self.watchdog.enter()
         try:
-            with _TRACER.span("tick", lane=plan.lane.kind):
+            with _TRACER.span("tick", **span_labels):
                 stall = self._fire("stall")
                 if stall is not None:
                     time.sleep(stall.ms / 1e3)
@@ -1146,6 +1286,13 @@ class PricingService:
         slots, used = plan.slots, plan.used
         if plan.lane.kind == "gen":
             slots = used = rows
+        dispatch_s = ((jaxhooks.total_dispatch_s() - dispatch_before)
+                      if _TRACER.enabled() else 0.0)
+        self.ledger.charge_tick(plan.lane.kind, wall,
+                                self._tick_parts(plan),
+                                slots or 1, used,
+                                dispatch_s=dispatch_s,
+                                retries=self.res.retries - retries_before)
         self.metrics.record_tick(plan.lane.kind, slots, used, rows, wall)
         self.flight.record("tick", lane=plan.lane.kind, slots=slots,
                            used=used, rows=rows, wall_s=wall,
@@ -1153,7 +1300,39 @@ class PricingService:
         if recompiled:
             self.log.event(-1, "tick_recompile", lane=plan.lane.kind,
                            traces=recompiled)
+        done, self._tick_done = self._tick_done, []
+        for fin in done:
+            fin()
         return True
+
+    def _tick_parts(self, plan: TickPlan) -> List[Tuple[Bill, int]]:
+        """(bill, rows contributed) per request for this tick — the
+        pro-ration weights :meth:`Ledger.charge_tick` splits the wall
+        over.  A coalesced owner with several assignments (multi-pass
+        fill) appears once, with its rows summed."""
+        if plan.gen is not None:
+            owner = plan.gen.owner
+            if owner.bill is None:
+                return []
+            return [(owner.bill, max(1, owner.task.sr.population))]
+        if plan.lane.kind == "raw":
+            groups = self._raw_parts if self._raw_parts is not None \
+                else plan.groups
+            return [(g.owner.bill, g.n_systems) for g in groups
+                    if g.owner.bill is not None]
+        parts: List[Tuple[Bill, int]] = []
+        pos: Dict[int, int] = {}
+        for a in plan.assignments:
+            bill = a.item.owner.bill
+            if bill is None:
+                continue
+            if id(bill) in pos:
+                old_bill, old_n = parts[pos[id(bill)]]
+                parts[pos[id(bill)]] = (old_bill, old_n + a.n)
+            else:
+                pos[id(bill)] = len(parts)
+                parts.append((bill, a.n))
+        return parts
 
     def _owners(self, plan: TickPlan) -> List[_Active]:
         owners = []
@@ -1318,7 +1497,10 @@ class PricingService:
             if req.on_partial is not None:
                 req.on_partial(req.rows_done, req.n_rows)
             if req.rows_done >= req.n_rows:
-                self._finish_sweep(req)
+                # defer past charge_tick so the final tick's share is on
+                # the bill before the response envelope snapshots it
+                self._tick_done.append(
+                    lambda r=req: self._finish_sweep(r))
         if _TRACER.enabled():
             _TRACER.add_complete("scatter", time.perf_counter() - now)
         return plan.used
@@ -1394,6 +1576,7 @@ class PricingService:
                 self.sched.queue.appendleft(groups.pop())
             if not groups:
                 return 0
+            self._raw_parts = list(groups)   # actual riders after shedding
             padded = pad_batch(batch, **self.raw_pad)
         host = jax.device_get(_TOTAL_JIT(padded, plan.lane.flow))  # THE sync
         now = time.perf_counter()
@@ -1424,7 +1607,8 @@ class PricingService:
                 continue
             req.rec.t_first = req.rec.t_first or now
             req.rows_done = req.n_rows
-            self._finish(req, SystemsResult(rows=rows))
+            self._tick_done.append(
+                lambda r=req, p=SystemsResult(rows=rows): self._finish(r, p))
         if _TRACER.enabled():
             _TRACER.add_complete("scatter", time.perf_counter() - now)
         return off
@@ -1450,17 +1634,20 @@ class PricingService:
         if req.deadline_t is not None:
             self._deadline_count -= 1
         self.metrics.finish_request(req.rec, ok=True)
+        bill_dict = self._close_bill(req, ok=True, status="ok")
         self.sched.release(req.cost)
         self._active.pop(req.uid, None)
         if self.journal is not None:
             self.journal.done(req.uid, "ok")
         if req.kind == "search":
             self._drop_checkpoints(req.origin)
+        _TRACER.instant("request_done", trace_id=req.trace_id,
+                        uid=req.uid, kind=req.kind)
         self.log.event(req.uid, "done", rows=req.n_rows,
                        degraded=req.degraded)
         self.flight.record("request", uid=req.uid, kind=req.kind,
                            rows=req.n_rows, wall_s=req.rec.latency_s,
-                           degraded=req.degraded)
+                           degraded=req.degraded, trace_id=req.trace_id)
         if not req.future.done():
             req.future.set_result(Response(
                 request_id=req.uid, kind=req.kind, ok=True, result=payload,
@@ -1472,7 +1659,8 @@ class PricingService:
                                and req.kind in ("price", "mc_risk")
                                else None),
                 replayed=req.replayed_from is not None,
-                replayed_from=req.replayed_from))
+                replayed_from=req.replayed_from,
+                trace_id=req.trace_id, bill=bill_dict))
 
     def _fail(self, req: _Active, code: str, message: str):
         if req.failed:
@@ -1483,19 +1671,23 @@ class PricingService:
         self.sched.drop_owned_by(req)
         self.sched.release(req.cost)
         self.metrics.finish_request(req.rec, ok=False)
+        bill_dict = self._close_bill(req, ok=False, status=code)
         self._active.pop(req.uid, None)
         if self.journal is not None:
             # a typed failure IS an answer: terminal in the journal, so
             # the request will not replay.
             self.journal.done(req.uid, code)
+        _TRACER.instant("request_error", trace_id=req.trace_id,
+                        uid=req.uid, kind=req.kind, code=code)
         self.log.event(req.uid, "error", code=code, message=message)
         self.flight.record("request_error", uid=req.uid, kind=req.kind,
-                           code=code, error=message)
+                           code=code, error=message, trace_id=req.trace_id)
         if not req.future.done():
             resp = error_response(req.uid, req.kind, code, message,
-                                  req.rec.t_submit)
+                                  req.rec.t_submit, trace_id=req.trace_id)
             resp.replayed = req.replayed_from is not None
             resp.replayed_from = req.replayed_from
+            resp.bill = bill_dict
             req.future.set_result(resp)
 
     # ------------------------------------------------------------------
@@ -1525,6 +1717,9 @@ class PricingService:
             "journal": (self.journal.stats()
                         if self.journal is not None else None),
         }
+        snap["ledger"] = self.ledger.snapshot()
+        snap["slo"] = ({"enabled": True, "objectives": self.slo.snapshot()}
+                       if self.slo is not None else {"enabled": False})
         if _TRACER.enabled():
             snap["obs"] = {
                 "phases": _TRACER.phase_table(),

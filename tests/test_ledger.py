@@ -1,0 +1,413 @@
+"""repro.obs ledger/SLO/tracing v2: the serving-cost ledger's
+sum-to-tick-wall invariant under coalescing + chunk splitting, bill
+determinism under seeded arrival interleaving, trace_id survival across
+journal replay and checkpoint resume, SLO burn math and latching, and
+histogram exemplar/quantile edge cases."""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.dse import DesignSpace, SKU
+from repro.obs.ledger import Ledger
+from repro.obs.registry import Histogram, Registry
+from repro.obs.slo import SLObjective, SLOTracker
+from repro.resilience import FaultInjector
+from repro.service import (DurabilityConfig, PriceRequest, PricingService,
+                           RankRequest, RequestJournal, SHUTTING_DOWN,
+                           SearchRequest, ServiceConfig, request_to_wire,
+                           serve)
+
+
+def _space(**kw):
+    d = dict(skus=(SKU("laptop", 200.0, 2e6), SKU("server", 400.0, 5e5)),
+             processes=("7nm", "12nm"), integrations=("MCM",),
+             chiplet_counts=(1, 2, 4), allow_reuse=True)
+    d.update(kw)
+    return DesignSpace(**d)
+
+
+@pytest.fixture(scope="module")
+def space():
+    return _space()
+
+
+@pytest.fixture(autouse=True)
+def _no_env_faults(monkeypatch):
+    monkeypatch.delenv("REPRO_FAULTS", raising=False)
+
+
+CFG = ServiceConfig(chunk=16, split=4, warm_mc=((64, (0.5, 0.9)),))
+
+
+# ---------------------------------------------------------------------------
+# Ledger unit: exact pro-ration, remainder absorption, terminal paths
+# ---------------------------------------------------------------------------
+
+
+def test_charge_tick_shares_sum_exactly_to_wall():
+    led = Ledger(registry=Registry())
+    bills = [led.open(f"t{i}", i, "price") for i in range(3)]
+    # awkward row counts that do NOT divide the wall evenly
+    led.charge_tick("chunk", 0.0123, [(bills[0], 7), (bills[1], 3),
+                                      (bills[2], 6)], slots=16, used=16)
+    total = sum(b.device_ms for b in bills)
+    assert total == pytest.approx(12.3, abs=0.0)      # exact, not approx
+    assert led.tick_residual_rel_max == 0.0
+    assert led.unattributed_ms == 0.0
+    # shares ordered by rows contributed
+    assert bills[0].device_ms > bills[2].device_ms > bills[1].device_ms
+    for b in bills:
+        assert b.ticks == 1 and b.rows_priced in (7, 3, 6)
+
+
+def test_charge_tick_padded_share_and_dispatch_proration():
+    led = Ledger(registry=Registry())
+    a, b = led.open("a", 1, "price"), led.open("b", 2, "rank")
+    led.charge_tick("chunk", 0.010, [(a, 6), (b, 2)], slots=16, used=8,
+                    dispatch_s=0.004, retries=1)
+    # half the slots are padding: every rider's padded share is half of
+    # its wall share
+    assert a.padded_ms == pytest.approx(a.device_ms * 0.5)
+    assert b.padded_ms == pytest.approx(b.device_ms * 0.5)
+    assert a.dispatch_ms == pytest.approx(3.0)        # 6/8 of 4 ms
+    assert b.dispatch_ms == pytest.approx(1.0)
+    assert a.retries == 1 and b.retries == 1
+
+
+def test_charge_tick_with_no_riders_books_unattributed():
+    led = Ledger(registry=Registry())
+    led.charge_tick("chunk", 0.005, [], slots=16, used=0)
+    assert led.unattributed_ms == pytest.approx(5.0)
+    assert led.device_ms_total == 0.0
+    snap = led.snapshot()
+    assert snap["unattributed_ms"] == pytest.approx(5.0)
+    assert snap["by_lane"]["chunk"]["ticks"] == 1
+
+
+def test_close_is_idempotent_and_first_terminal_wins():
+    led = Ledger(registry=Registry())
+    bill = led.open("x", 1, "price")
+    led.close(bill, status="deadline_exceeded", latency_s=0.2)
+    led.close(bill, status="ok", latency_s=9.9)       # double terminal
+    assert bill.status == "deadline_exceeded"
+    assert bill.latency_ms == pytest.approx(200.0)
+    snap = led.snapshot()
+    assert snap["closed"] == 1
+    assert snap["by_kind"]["price"]["requests"] == 1
+    assert snap["by_kind"]["price"]["errors"] == 1
+
+
+def test_late_charge_after_close_still_lands_in_aggregates():
+    # the deferred-finish ordering in the server normally charges before
+    # closing, but a failure path can close first — the kind aggregates
+    # accumulate at charge time, so the share is never lost
+    led = Ledger(registry=Registry())
+    bill = led.open("x", 1, "price")
+    led.close(bill, status="internal_error")
+    led.charge_tick("chunk", 0.002, [(bill, 4)], slots=4, used=4)
+    assert led.snapshot()["by_kind"]["price"]["device_ms"] == \
+        pytest.approx(2.0)
+    assert bill.device_ms == pytest.approx(2.0)
+
+
+def test_bill_for_finds_open_and_closed():
+    led = Ledger(registry=Registry())
+    a = led.open("a", 1, "price")
+    b = led.open("b", 2, "rank")
+    led.close(b, status="ok")
+    assert led.bill_for(1) is a
+    assert led.bill_for(2) is b
+    assert led.bill_for(99) is None
+
+
+# ---------------------------------------------------------------------------
+# Service level: bills decompose the measured tick wall under
+# coalescing + chunk splitting, and every envelope is billed
+# ---------------------------------------------------------------------------
+
+
+def _mixed_requests():
+    rng = np.random.default_rng(7)
+    reqs = [PriceRequest(indices=rng.integers(0, 40, n).tolist())
+            for n in (23, 9, 31, 4, 17)]       # spans chunks, forces splits
+    reqs.append(RankRequest(indices=list(range(40)), top_k=3))
+    return reqs
+
+
+def test_bills_sum_to_tick_wall_under_coalescing(space):
+    resps, svc = serve(space, _mixed_requests(), CFG)
+    assert all(r.ok for r in resps), [r.error for r in resps]
+    led = svc.snapshot()["ledger"]
+    assert led["open"] == 0
+    assert led["unattributed_ms"] == 0.0
+    assert led["tick_residual_rel_max"] < 1e-9
+    # the closed bills are a complete decomposition of the billed wall
+    total_billed = sum(r.bill["device_ms"] for r in resps)
+    assert total_billed == pytest.approx(led["device_ms_total"], rel=1e-9)
+    # and the billed wall is exactly the per-lane tick wall
+    lane_wall = sum(v["wall_ms"] for v in led["by_lane"].values())
+    assert total_billed == pytest.approx(lane_wall, rel=1e-9)
+    for r in resps:
+        assert r.trace_id
+        assert r.bill["status"] == "ok"
+        assert r.bill["ticks"] >= 1
+        assert r.bill["trace_id"] == r.trace_id
+
+
+def test_bill_structure_deterministic_under_seeded_interleaving(space):
+    """Same seeded arrival order twice -> identical bill structure
+    (ticks ridden, rows billed, statuses); wall-clock fields may differ."""
+    def run_once():
+        resps, svc = serve(space, _mixed_requests(), CFG)
+        assert all(r.ok for r in resps)
+        return [(r.kind, r.bill["ticks"], r.bill["rows_priced"],
+                 r.bill["status"], r.bill["cache_hit"]) for r in resps]
+
+    assert run_once() == run_once()
+
+
+def test_rejections_carry_trace_id_and_closed_bill(space):
+    async def main():
+        svc = PricingService(space, ServiceConfig(chunk=16, split=4,
+                                                  max_pending=8))
+        await svc.start()
+        ok = svc.submit(PriceRequest(indices=[0, 1]))
+        too_big = svc.submit(PriceRequest(indices=list(range(32))))
+        invalid = svc.submit(PriceRequest(indices=[10_000_000]))
+        out = await asyncio.gather(ok, too_big, invalid)
+        await svc.stop()
+        return out, svc
+
+    (ok, too_big, invalid), svc = asyncio.run(main())
+    assert ok.ok and ok.trace_id and ok.bill["status"] == "ok"
+    for r in (too_big, invalid):
+        assert not r.ok
+        assert r.trace_id, "rejections must still carry a trace_id"
+        assert r.bill is not None and r.bill["status"] == r.error.code
+    led = svc.snapshot()["ledger"]
+    assert led["open"] == 0                      # rejected bills closed too
+    assert led["by_kind"]["price"]["errors"] == 2
+
+
+def test_cache_hit_bills_zero_device_ms(space):
+    # sequential submits: the second answers from the host result cache
+    async def main():
+        svc = PricingService(space, CFG)
+        await svc.start()
+        r1 = await svc.submit(PriceRequest(indices=[2, 4, 6]))
+        r2 = await svc.submit(PriceRequest(indices=[2, 4, 6]))
+        await svc.stop()
+        return [r1, r2], svc
+
+    resps, svc = asyncio.run(main())
+    assert all(r.ok for r in resps)
+    hit = next(r for r in resps if r.cached)
+    assert hit.bill["cache_hit"] is True
+    assert hit.bill["device_ms"] == 0.0
+    assert hit.bill["ticks"] == 0
+    led = svc.snapshot()["ledger"]
+    assert led["by_kind"]["price"]["cache_hits"] == 1
+
+
+# ---------------------------------------------------------------------------
+# trace_id durability: journal replay and checkpoint resume
+# ---------------------------------------------------------------------------
+
+
+def test_trace_id_survives_crash_replay_and_checkpoint_resume(space,
+                                                              tmp_path):
+    dcfg = DurabilityConfig(directory=tmp_path / "dur", checkpoint_every=1)
+    cfg = ServiceConfig(chunk=16, split=4, durability=dcfg)
+
+    async def main():
+        svc = PricingService(space, cfg)
+        await svc.start()
+        svc.faults = FaultInjector("seed=1;crash:p=0.3,n=1")
+        crashed = await svc.submit(SearchRequest(seed=3, population=8,
+                                                 generations=10, elite=3))
+        assert not crashed.ok and crashed.error.code == SHUTTING_DOWN
+        assert crashed.trace_id
+        await svc.stop()
+        # restart over the same durability dir: the journal replays the
+        # search and the checkpoint restores its state mid-run
+        svc.faults = FaultInjector("")
+        await svc.start()
+        replayed = await svc.drain_replayed()
+        await svc.stop()
+        return crashed, replayed, svc
+
+    crashed, replayed, svc = asyncio.run(main())
+    assert len(replayed) == 1
+    rr = replayed[0]
+    assert rr.ok and rr.replayed
+    # ONE logical request, ONE trace across the process restart —
+    # the replayed answer correlates with the pre-crash admission
+    assert rr.trace_id == crashed.trace_id
+    assert rr.bill["trace_id"] == crashed.trace_id
+    assert rr.bill["replayed"] is True
+    dur = svc.snapshot()["durability"]
+    assert dur["checkpoints_restored"] == 1      # resume actually happened
+
+
+def test_checkpoint_extra_roundtrips_trace_id(space, tmp_path):
+    from repro.checkpoint.store import CheckpointManager
+    from repro.dse.search import SearchState
+    import jax
+    st = SearchState.init(jax.random.PRNGKey(0), population=8,
+                          size=space.size(), risk=None)
+    st.trace_id = "deadbeefcafef00d"
+    mgr = CheckpointManager(tmp_path / "ckpt", keep=2)
+    st.save(mgr)
+    back = SearchState.restore_latest(mgr, 8)
+    assert back is not None
+    assert back.trace_id == "deadbeefcafef00d"
+
+
+def test_journal_admit_roundtrips_trace_id(space, tmp_path):
+    from repro.service import RequestJournal, request_to_wire
+    j = RequestJournal(tmp_path / "j")
+    wire = request_to_wire(PriceRequest(indices=[1, 2]), space)
+    j.admit(1, wire, trace_id="feedface01020304")
+    j.admit(2, wire)                              # pre-tracing record shape
+    j.close()
+    j2 = RequestJournal(tmp_path / "j")
+    entries = j2.replay()
+    j2.close()
+    assert [e.trace_id for e in entries] == ["feedface01020304", ""]
+
+
+# ---------------------------------------------------------------------------
+# SLO tracker: burn math, latching, windowing
+# ---------------------------------------------------------------------------
+
+
+def test_slo_burn_math_and_violation_counts():
+    reg = Registry()
+    slo = SLOTracker((SLObjective(kind="price", latency_ms=100.0,
+                                  latency_target=0.9, availability=0.9,
+                                  window_s=60.0, alert_burn_rate=10.0),),
+                     registry=reg)
+    for i in range(8):
+        slo.observe("price", 0.010, True, now=float(i))
+    slo.observe("price", 0.500, True, now=8.0)    # latency violation
+    slo.observe("price", 0.010, False, now=9.0)   # availability error
+    snap = slo.snapshot()["price"]
+    # burn = bad_frac / (1 - target) = 0.1 / 0.1 = 1.0 for each dimension
+    assert snap["latency_burn"] == pytest.approx(1.0)
+    assert snap["availability_burn"] == pytest.approx(1.0)
+    assert snap["latency_violations"] == 1
+    assert snap["errors"] == 1
+    assert snap["burn_events"] == 0               # alert threshold is 10x
+    assert reg.gauge("slo_price_latency_burn").get() == pytest.approx(1.0)
+    # other kinds don't feed this objective
+    slo.observe("rank", 9.9, False, now=10.0)
+    assert slo.snapshot()["price"]["errors"] == 1
+
+
+def test_slo_burn_event_latches_once_per_excursion():
+    fired = []
+    slo = SLOTracker((SLObjective(kind="*", availability=0.5,
+                                  window_s=1e9, alert_burn_rate=1.0),),
+                     registry=Registry(),
+                     on_burn=lambda k, dim, burn, tid: fired.append(
+                         (k, dim, round(burn, 3), tid)))
+    slo.observe("price", 0.0, True, now=0.0)
+    slo.observe("price", 0.0, False, trace_id="aaaa", now=1.0)  # burn 1.0
+    slo.observe("price", 0.0, False, trace_id="bbbb", now=2.0)  # still over
+    assert len(fired) == 1                         # latched: one per excursion
+    assert fired[0][0] == "*" and fired[0][1] == "availability"
+    assert fired[0][3] == "aaaa"
+    # recover: enough ok traffic drops burn below the threshold...
+    for i in range(8):
+        slo.observe("price", 0.0, True, now=3.0 + i)
+    assert not slo.snapshot()["all"]["burning"]
+    # ...so the next excursion fires a NEW event
+    for i in range(20):
+        slo.observe("price", 0.0, False, now=20.0 + i)
+    assert len(fired) == 2
+    assert slo.snapshot()["all"]["burn_events"] == 2
+
+
+def test_slo_window_prunes_old_events():
+    slo = SLOTracker((SLObjective(kind="*", availability=0.9,
+                                  window_s=10.0),), registry=Registry())
+    slo.observe("price", 0.0, False, now=0.0)
+    assert slo.snapshot()["all"]["availability_burn"] > 0
+    slo.observe("price", 0.0, True, now=100.0)    # old failure aged out
+    snap = slo.snapshot()["all"]
+    assert snap["window_n"] == 1
+    assert snap["availability_burn"] == 0.0
+    assert snap["errors"] == 1                     # lifetime counter stays
+
+
+def test_service_slo_burn_records_flight_event(space):
+    # an impossible latency target makes every answer a violation with
+    # burn >> 1: the service's on_burn hook must land a flight record
+    cfg = ServiceConfig(chunk=16, split=4,
+                        slos=(SLObjective(kind="*", latency_ms=0.0,
+                                          latency_target=0.99,
+                                          alert_burn_rate=1.0),))
+    resps, svc = serve(space, [PriceRequest(indices=[0, 1, 2])], cfg)
+    assert resps[0].ok
+    slo = svc.snapshot()["slo"]
+    assert slo["enabled"]
+    assert slo["objectives"]["all"]["burn_events"] >= 1
+    burns = svc.flight.records("slo_burn")
+    assert burns and burns[0]["dimension"] == "latency"
+    assert burns[0]["trace_id"] == resps[0].trace_id
+
+
+def test_slo_disabled_by_default(space):
+    resps, svc = serve(space, [PriceRequest(indices=[0])], CFG)
+    assert resps[0].ok
+    assert svc.slo is None
+    assert svc.snapshot()["slo"] == {"enabled": False}
+
+
+# ---------------------------------------------------------------------------
+# Histogram exemplars / quantiles: edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_empty_and_single_sample():
+    h = Histogram("h")
+    s = h.sample()
+    assert s["count"] == 0 and "exemplars" not in s
+    assert h.quantile(0.5) == 0.0
+    h.observe(3.5)
+    s = h.sample()
+    assert s["p50"] == s["p99"] == 3.5
+    assert "exemplars" not in s                    # none attached
+
+
+def test_histogram_exemplars_bounded_latest_wins():
+    h = Histogram("h", max_exemplars=4)
+    for i in range(10):
+        h.observe(float(i), exemplar=f"trace{i}")
+    ex = h.exemplars()
+    assert len(ex) == 4
+    assert [e["ref"] for e in ex] == ["trace6", "trace7", "trace8", "trace9"]
+    assert h.sample()["exemplars"] == ex
+    # empty-string exemplars are dropped, not stored
+    h.observe(99.0, exemplar="")
+    assert len(h.exemplars()) == 4
+
+
+def test_histogram_exemplars_in_exposition():
+    reg = Registry()
+    reg.histogram("lat", help="x").observe(1.25, exemplar="abcd1234")
+    text = reg.exposition()
+    assert '# EXEMPLAR lat{trace_id="abcd1234"} 1.25' in text
+    # classic Prometheus parsers see only comments + standard lines
+    for line in text.splitlines():
+        assert line.startswith("#") or " " in line
+
+
+def test_histogram_snapshot_shape_unchanged_without_exemplars():
+    # regression guard for snapshot consumers: exemplar-free histograms
+    # must keep the exact pre-exemplar key set
+    h = Histogram("h")
+    h.observe(1.0)
+    assert set(h.sample()) == {"count", "sum", "min", "max", "mean",
+                               "p50", "p95", "p99"}
